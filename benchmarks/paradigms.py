@@ -1,0 +1,235 @@
+"""Fig. 4 reproduction: wall-clock vs (clusters, size, features) per paradigm.
+
+The paper compares Java/C x single/multi-thread x GPU on one tablet.  The
+host-runnable analogues here (same *relative* claims under test):
+
+- ``python_loop``  — interpreted per-element loops (the Java analogue)
+- ``numpy``        — vectorized single-thread native (the C analogue)
+- ``jax_jit``      — XLA-compiled (the GPU-kernel analogue; compile cost
+                     excluded here, measured separately in setup_overhead)
+- ``pallas``       — the TPU kernels in interpret mode (functional check;
+                     wall-clock on CPU is not meaningful for the TPU target)
+
+Paper claims checked:
+1. K-Means scales ~linearly, DBSCAN ~quadratically in n (log-log slopes);
+2. compiled implementations win at scale while interpreted loses ground;
+3. both algorithms scale ~linearly with cluster count.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbscan as dbscan_mod
+from repro.core import kmeans as kmeans_mod
+from repro.data.synthetic import ClusterSpec, make_blobs
+
+MAX_PYTHON_N = 1024  # interpreted paradigm capped (the paper's Java was slowest)
+
+
+# -- paradigm implementations: K-Means assignment + update loop ----------------
+
+
+def _kmeans_python(x: np.ndarray, c0: np.ndarray, iters: int = 10):
+    n, d = x.shape
+    k = c0.shape[0]
+    c = [list(row) for row in c0]
+    assign = [0] * n
+    for _ in range(iters):
+        for i in range(n):
+            best, bd = 0, float("inf")
+            for j in range(k):
+                s = 0.0
+                for f in range(d):
+                    t = x[i][f] - c[j][f]
+                    s += t * t
+                if s < bd:
+                    best, bd = j, s
+            assign[i] = best
+        sums = [[0.0] * d for _ in range(k)]
+        counts = [0] * k
+        for i in range(n):
+            counts[assign[i]] += 1
+            for f in range(d):
+                sums[assign[i]][f] += x[i][f]
+        for j in range(k):
+            if counts[j]:
+                c[j] = [s / counts[j] for s in sums[j]]
+    return np.asarray(assign)
+
+
+def _kmeans_numpy(x: np.ndarray, c0: np.ndarray, iters: int = 10):
+    c = c0.copy()
+    for _ in range(iters):
+        d2 = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+        assign = d2.argmin(1)
+        for j in range(c.shape[0]):
+            m = assign == j
+            if m.any():
+                c[j] = x[m].mean(0)
+    return assign
+
+
+def _kmeans_jax(x, c0, iters: int = 10, use_kernel: bool = False):
+    cfg = kmeans_mod.KMeansConfig(k=c0.shape[0], use_kernel=use_kernel)
+
+    @jax.jit
+    def run(x, c):
+        def body(i, carry):
+            assign, c = carry
+            assign, c, _, _ = kmeans_mod.kmeans_step(x, c, cfg)
+            return assign, c
+
+        assign = jnp.zeros((x.shape[0],), jnp.int32)
+        assign, c = jax.lax.fori_loop(0, iters, body, (assign, c))
+        return assign, c
+
+    return run
+
+
+def _dbscan_python(x: np.ndarray, eps: float, min_pts: int):
+    n, d = x.shape
+    eps2 = eps * eps
+    labels = [0] * n
+    visited = [False] * n
+    # degrees
+    deg = [0] * n
+    for i in range(n):
+        cnt = 0
+        for j in range(n):
+            s = 0.0
+            for f in range(d):
+                t = x[i][f] - x[j][f]
+                s += t * t
+            if s <= eps2:
+                cnt += 1
+        deg[i] = cnt
+    core = [deg[i] >= min_pts for i in range(n)]
+    cid = 0
+    for seed in range(n):
+        if not core[seed] or visited[seed]:
+            continue
+        cid += 1
+        frontier = [seed]
+        while frontier:
+            new = []
+            for p in frontier:
+                for q in range(n):
+                    if labels[q] == 0:
+                        s = 0.0
+                        for f in range(d):
+                            t = x[p][f] - x[q][f]
+                            s += t * t
+                        if s <= eps2:
+                            labels[q] = cid
+                            visited[q] = True
+                            if core[q]:
+                                new.append(q)
+            frontier = new
+    return np.asarray(labels)
+
+
+def _time(fn: Callable, *args, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        elif isinstance(out, tuple) and hasattr(out[0], "block_until_ready"):
+            out[0].block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(fast: bool = True) -> List[Dict]:
+    """Returns a list of measurement rows (also used by energy.py)."""
+    if fast:
+        grid = [ClusterSpec(f, c, s)
+                for f in (2,) for c in (4, 8) for s in (128, 512, 2048)]
+        grid += [ClusterSpec(f, 4, 512) for f in (1, 4)]
+    else:
+        from repro.data.synthetic import paper_grid
+        grid = list(paper_grid())
+
+    rows: List[Dict] = []
+    key = jax.random.PRNGKey(0)
+    for spec in grid:
+        x, _, _ = make_blobs(jax.random.fold_in(key, hash(spec) % 2**31), spec)
+        xn = np.asarray(x, np.float64)
+        n = spec.n_points
+        c0 = np.asarray(x[: spec.clusters], np.float64)
+
+        # K-Means (fixed 10 iterations so paradigms are comparable)
+        times: Dict[str, Optional[float]] = {}
+        if n <= MAX_PYTHON_N:
+            times["python_loop"] = _time(_kmeans_python, xn, c0, repeats=1)
+        times["numpy"] = _time(_kmeans_numpy, np.asarray(x), c0.astype(np.float32))
+        runner = _kmeans_jax(x, jnp.asarray(c0, jnp.float32))
+        runner(x, jnp.asarray(c0, jnp.float32))  # warm (setup measured separately)
+        times["jax_jit"] = _time(runner, x, jnp.asarray(c0, jnp.float32))
+        kr = _kmeans_jax(x, jnp.asarray(c0, jnp.float32), use_kernel=True)
+        kr(x, jnp.asarray(c0, jnp.float32))
+        times["pallas"] = _time(kr, x, jnp.asarray(c0, jnp.float32))
+        for paradigm, t in times.items():
+            rows.append(dict(algo="kmeans", paradigm=paradigm,
+                             features=spec.features, clusters=spec.clusters,
+                             size=spec.points_per_cluster, n=n, seconds=t))
+
+        # DBSCAN
+        cfg = dbscan_mod.DBSCANConfig.paper_defaults(spec.features)
+        times = {}
+        if n <= MAX_PYTHON_N:
+            times["python_loop"] = _time(
+                _dbscan_python, xn, cfg.eps, cfg.min_pts, repeats=1
+            )
+        times["numpy"] = _time(dbscan_mod.fit_oracle, np.asarray(x), cfg)
+        jit_cfg = dbscan_mod.DBSCANConfig(eps=cfg.eps, min_pts=cfg.min_pts,
+                                          use_kernel=False)
+        dbscan_mod.fit(x, jit_cfg)  # warm
+        times["jax_jit"] = _time(lambda: dbscan_mod.fit(x, jit_cfg).labels)
+        pl_cfg = dbscan_mod.DBSCANConfig(eps=cfg.eps, min_pts=cfg.min_pts,
+                                         use_kernel=True)
+        dbscan_mod.fit(x, pl_cfg)
+        times["pallas"] = _time(lambda: dbscan_mod.fit(x, pl_cfg).labels)
+        for paradigm, t in times.items():
+            rows.append(dict(algo="dbscan", paradigm=paradigm,
+                             features=spec.features, clusters=spec.clusters,
+                             size=spec.points_per_cluster, n=n, seconds=t))
+    return rows
+
+
+def scaling_slopes(rows: List[Dict]) -> Dict[str, float]:
+    """Log-log slope of seconds vs n, per algo (paper: km ~1, dbscan ~2)."""
+    out = {}
+    for algo in ("kmeans", "dbscan"):
+        pts = [(r["n"], r["seconds"]) for r in rows
+               if r["algo"] == algo and r["paradigm"] == "numpy"
+               and r["features"] == 2 and r["clusters"] == 4]
+        if len(pts) >= 2:
+            pts.sort()
+            xs = np.log([p[0] for p in pts])
+            ys = np.log([p[1] for p in pts])
+            out[algo] = float(np.polyfit(xs, ys, 1)[0])
+    return out
+
+
+def main() -> None:
+    rows = run(fast=True)
+    print("algo,paradigm,features,clusters,size,n,seconds")
+    for r in rows:
+        print(f"{r['algo']},{r['paradigm']},{r['features']},{r['clusters']},"
+              f"{r['size']},{r['n']},{r['seconds']:.6f}")
+    slopes = scaling_slopes(rows)
+    print(f"# loglog slope kmeans={slopes.get('kmeans', float('nan')):.2f} "
+          f"(paper: ~1), dbscan={slopes.get('dbscan', float('nan')):.2f} "
+          f"(paper: ~2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape) from the
+dry-run artifacts, dominant bottleneck, and useful-FLOP ratios.
+
+Terms (TPU v5e constants; per chip):
+    compute_s    = HLO_FLOPs_per_chip / 197e12         [bf16 peak]
+    memory_s     = HLO_bytes_per_chip / 819e9          [HBM BW]
+    collective_s = wire_bytes_per_chip / 50e9          [per-link ICI]
+
+HLO_FLOPs/bytes come from `compiled.cost_analysis()` of *unrolled* shallow
+compiles extrapolated over depth (XLA counts scan bodies once — verified in
+EXPERIMENTS.md §Method); wire bytes from HLO collective parsing with ring
+factors (launch/hlo.py).
+
+MODEL_FLOPS (useful work, global per step):
+    train:   6 * N * tokens   (+ 2NB-style remat excluded: it's overhead)
+    prefill: 2 * N * tokens
+    decode:  2 * N * batch    (one token per sequence)
+with N = active params for MoE.  ratio = MODEL_FLOPS / (HLO_FLOPs * chips)
+catches remat/redundancy waste; roofline_fraction = ideal_compute_s /
+max(term) is the headline score per cell.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "..", "results", "dryrun")
+
+
+def model_flops(row: Dict, shape_kind: str) -> float:
+    n = row["n_active_params"]
+    if shape_kind == "train":
+        tokens = row["tokens_global"]
+        return 6.0 * n * tokens
+    if shape_kind == "prefill":
+        return 2.0 * n * row["tokens_global"]
+    return 2.0 * n * row["batch_global"]
+
+
+def _shape_kind(shape: str) -> str:
+    if shape.startswith("train"):
+        return "train"
+    if shape.startswith("prefill"):
+        return "prefill"
+    if shape.startswith("cluster"):
+        return "cluster"
+    return "decode"
+
+
+def _shape_tokens(shape: str) -> Dict[str, int]:
+    if shape.startswith("cluster"):
+        return {"seq": 0, "batch": 0, "tokens": 0}
+    table = {
+        "train_4k": (4096, 256),
+        "prefill_32k": (32768, 32),
+        "decode_32k": (32768, 128),
+        "long_500k": (524288, 1),
+    }
+    seq, batch = table[shape]
+    kind = _shape_kind(shape)
+    tokens = seq * batch if kind in ("train", "prefill") else batch
+    return {"seq": seq, "batch": batch, "tokens": tokens}
+
+
+def load_cells(mesh: str = "single_pod_16x16",
+               tag: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, mesh, "*.json"))):
+        r = json.load(open(path))
+        if r.get("status") != "ok":
+            rows.append(r)
+            continue
+        if (r.get("tag") or None) != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def analyze(row: Dict) -> Optional[Dict]:
+    if row.get("status") != "ok" or "derived" not in row:
+        return None
+    d = row["derived"]
+    st = _shape_tokens(row["shape"])
+    kind = _shape_kind(row["shape"])
+    chips = row["devices"]
+
+    compute_s = d["flops"] / PEAK_FLOPS
+    memory_s = d["bytes_accessed"] / HBM_BW
+    collective_s = d["wire_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    if kind == "cluster":
+        p = row.get("problem", {})
+        # assignment (2nkd) + one-hot centroid-update einsum (2nkd)
+        mf = 4.0 * p.get("n", 0) * p.get("k", 0) * p.get("d", 0)
+    else:
+        mf = model_flops(
+            {"n_active_params": row["n_active_params"],
+             "tokens_global": st["tokens"], "batch_global": st["batch"]},
+            kind,
+        )
+    hlo_global = d["flops"] * chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    ideal_s = mf / (chips * PEAK_FLOPS)
+    step_lb = max(terms.values())
+    frac = ideal_s / step_lb if step_lb else 0.0
+
+    hbm_gib = row["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+    args_gib = row["memory_analysis"].get("argument_size_in_bytes", 0) / 2**30
+
+    lever = {
+        "compute": "cut redundant/remat FLOPs (ratio shows headroom) or "
+                   "raise arithmetic intensity per chip",
+        "memory": "fuse/chunk the largest HBM streams (attention scores, "
+                  "logits) and keep working sets in VMEM",
+        "collective": "shrink or overlap the biggest all-reduce (bf16 "
+                      "payloads, reduce-scatter decomposition, async)",
+    }[dominant]
+
+    return dict(
+        arch=row["arch"], shape=row["shape"], kind=kind, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mf, hlo_flops_global=hlo_global,
+        useful_ratio=ratio, roofline_fraction=frac,
+        temp_gib=hbm_gib, args_gib=args_gib,
+        step_lower_bound_s=step_lb, lever=lever,
+        tag=row.get("tag", ""),
+    )
+
+
+def table(mesh: str = "single_pod_16x16", tag: Optional[str] = None
+          ) -> List[Dict]:
+    out = []
+    for row in load_cells(mesh, tag):
+        a = analyze(row)
+        if a:
+            out.append(a)
+    return out
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | useful/HLO | roofline frac | temp GiB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2%} | {r['temp_gib']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = table()
+    print("arch,shape,us_per_call,derived")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        # us_per_call = roofline step lower bound in microseconds
+        print(f"roofline_{r['arch']}_{r['shape']},"
+              f"{r['step_lower_bound_s'] * 1e6:.1f},"
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+              f"useful={r['useful_ratio']:.2f}")
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        coll = max(rows, key=lambda r: r["collective_s"] /
+                   max(r["step_lower_bound_s"], 1e-12))
+        print(f"# worst roofline fraction: {worst['arch']} x {worst['shape']}"
+              f" ({worst['roofline_fraction']:.2%})")
+        print(f"# most collective-bound: {coll['arch']} x {coll['shape']}")
+    md = render_markdown(rows)
+    out = os.path.join(RESULTS, "..", "roofline.md")
+    with open(out, "w") as f:
+        f.write(md + "\n")
+    print(f"# wrote {os.path.relpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

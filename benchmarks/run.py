@@ -1,0 +1,65 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast set
+    PYTHONPATH=src python -m benchmarks.run --full     # full 60-tuple grid
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run the paper's full 60-tuple grid")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import energy, paradigms, roofline, setup_overhead
+
+    print("== Fig 4: paradigms (wall clock vs clusters/size/features) ==")
+    rows = paradigms.run(fast=not args.full)
+    print("name,us_per_call,derived")
+    for r in rows:
+        if r["seconds"] is None:
+            continue
+        print(f"fig4_{r['algo']}_{r['paradigm']}_f{r['features']}"
+              f"c{r['clusters']}s{r['size']},{r['seconds'] * 1e6:.1f},"
+              f"n={r['n']}")
+    slopes = paradigms.scaling_slopes(rows)
+    print(f"fig4_slope_kmeans,{slopes.get('kmeans', 0):.3f},paper~1")
+    print(f"fig4_slope_dbscan,{slopes.get('dbscan', 0):.3f},paper~2")
+
+    print("\n== Fig 5/6 + Table II: setup overheads ==")
+    ks = setup_overhead.measure_kernel_setup(repeats=3)
+    ts = setup_overhead.measure_thread_setup(repeats=10)
+    mk = statistics.median(ks["kmeans"])
+    md = statistics.median(ks["dbscan"])
+    mt = statistics.median(ts)
+    print("name,us_per_call,derived")
+    print(f"fig5_setup_kmeans,{mk * 1e6:.0f},one_kernel")
+    print(f"fig5_setup_dbscan,{md * 1e6:.0f},two_kernels;ratio="
+          f"{md / mk:.2f};paper=1.23")
+    print(f"fig6_thread_setup,{mt * 1e6:.1f},n_threads=7")
+
+    print("\n== Fig 9: energy (modeled; see DESIGN.md §7) ==")
+    print("name,us_per_call,derived")
+    for r in energy.host_energy(rows):
+        print(f"fig9_{r['algo']}_{r['paradigm']},{r['seconds'] * 1e6:.0f},"
+              f"modeled_J={r['modeled_joules']:.2f}")
+
+    if not args.skip_roofline:
+        print("\n== Roofline (from dry-run artifacts) ==")
+        try:
+            roofline.main()
+        except Exception as e:  # dry-run may not have finished yet
+            print(f"roofline unavailable: {e!r}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

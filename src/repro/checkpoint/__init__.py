@@ -1,0 +1,13 @@
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    CheckpointStore,
+    latest_step,
+)
+from repro.checkpoint.elastic import restore_resharded
+
+__all__ = [
+    "AsyncCheckpointer",
+    "CheckpointStore",
+    "latest_step",
+    "restore_resharded",
+]

@@ -1,0 +1,54 @@
+"""Elastic restart: restore a checkpoint onto a different mesh.
+
+A job checkpointed on a (2, 16, 16) multi-pod mesh must be resumable on a
+single (16, 16) pod after losing a pod (and vice versa after regaining one).
+Checkpoints store *global* logical arrays (see store.py), so resharding is a
+placement decision at restore time, not a data transformation:
+
+    state = restore_resharded(store, step, like=abstract_state,
+                              mesh=new_mesh, rules=sharding_rules)
+
+The sharding tree is recomputed from the same logical-axis rules used at
+save time (repro.parallel.sharding), evaluated against the *new* mesh — the
+single source of truth that makes save-mesh and restore-mesh independent.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.store import CheckpointStore
+
+
+def restore_resharded(
+    store: CheckpointStore,
+    step: int,
+    like: Any,
+    mesh: Mesh,
+    sharding_fn: Callable[[Any, Mesh], Any],
+) -> Any:
+    """Restore `step` placing leaves per ``sharding_fn(like, mesh)``.
+
+    ``sharding_fn`` maps (abstract state tree, mesh) -> tree of NamedSharding;
+    use :func:`repro.parallel.sharding.state_shardings` for train states.
+    """
+    shardings = sharding_fn(like, mesh)
+    return store.restore(step, like, shardings=shardings)
+
+
+def emergency_save(
+    store: CheckpointStore, step: int, tree: Any, reason: str
+) -> Optional[str]:
+    """Best-effort synchronous save on the preemption path.
+
+    Never raises (the process is already going down); returns the directory
+    on success, None on failure.
+    """
+    try:
+        return store.save(step, tree, metadata={"emergency": True,
+                                                "reason": reason})
+    except BaseException:
+        return None

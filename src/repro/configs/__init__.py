@@ -1,0 +1,48 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Each assigned architecture has its own module with the exact published
+config plus a ``smoke()`` reduced config of the same family for CPU tests.
+"""
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES
+
+_ARCH_MODULES = {
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3p8b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe_42b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    import importlib
+
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(_ARCH_MODULES[name]).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    import importlib
+
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(_ARCH_MODULES[name]).smoke()
+
+
+__all__ = [
+    "ModelConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "ARCH_NAMES",
+    "get_config",
+    "get_smoke_config",
+]

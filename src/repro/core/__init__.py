@@ -1,0 +1,24 @@
+# The paper's primary contribution: preemption-safe accelerated data mining.
+# - kmeans / dbscan: the two algorithms, kernel-backed, with the paper's
+#   cancellable host-loop variants and fully jitted variants;
+# - distributed: pod-scale sharded steps (pjit + ring systolic);
+# - jobs: WorkManager-analogue persistent job store;
+# - cancellation: the abort-flag protocol behind the RW lock.
+
+from repro.core.cancellation import (
+    CancellationToken,
+    CancelReason,
+    JobCancelled,
+    cancel_after,
+)
+from repro.core.jobs import Job, JobState, JobStore
+
+__all__ = [
+    "CancellationToken",
+    "CancelReason",
+    "JobCancelled",
+    "cancel_after",
+    "Job",
+    "JobState",
+    "JobStore",
+]

@@ -1,0 +1,270 @@
+"""DBSCAN — non-recursive, kernel-backed, preemption-safe.
+
+Paper semantics (§II.C):
+- non-recursive formulation ("it is not possible to use recursion with
+  OpenCL") — here `lax.while_loop` replaces the paper's explicit work list;
+- two accelerator kernels "that have almost the same purpose": core-point
+  reachability in the main loop and cluster expansion — here
+  :func:`repro.kernels.neighbor.epsilon_degree` and
+  :func:`repro.kernels.neighbor.expand_frontier`;
+- defaults: min_pts = 10 x features, eps = sqrt(features);
+- per-point bookkeeping in one int16 word: "the first three bits indicate if
+  the data item has been visited and the density reachability.  The other
+  bits are used to store the cluster number (0 equals to noise).  The first
+  three bits are deleted before the algorithm finishes."  Implemented
+  verbatim in :func:`pack_state` / :func:`unpack_state` / :func:`finish`.
+
+Cluster ids are assigned in discovery order with the lowest-index unvisited
+core point as the next seed, so the partition — including contended border
+points, which go to the earliest-discovered cluster — is deterministic and
+bit-identical to the sequential oracle in tests.
+
+TPU adaptation of the expansion: the GPU version expands one neighborhood
+work-item at a time; here a whole frontier expands per kernel launch
+(reach = A · frontier on the MXU), so the number of kernel launches per
+cluster is its BFS depth, not its point count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cancellation import CancellationToken
+from repro.kernels.neighbor.ops import epsilon_degree, expand_frontier
+from repro.kernels.neighbor.ref import epsilon_degree_ref, expand_frontier_ref
+
+# --- the paper's int16 state word ------------------------------------------
+
+VISITED_BIT = 0x1     # bit 0: visited
+REACHABLE_BIT = 0x2   # bit 1: density-reachable (member of some cluster)
+CORE_BIT = 0x4        # bit 2: core point
+FLAG_MASK = 0x7
+CLUSTER_SHIFT = 3     # cluster id lives in bits 3..15; 0 = noise
+
+
+def pack_state(labels: jnp.ndarray, visited: jnp.ndarray,
+               member: jnp.ndarray, core: jnp.ndarray) -> jnp.ndarray:
+    """Pack per-point state into the paper's int16 word."""
+    word = (labels.astype(jnp.int32) << CLUSTER_SHIFT)
+    word = word | jnp.where(visited, VISITED_BIT, 0)
+    word = word | jnp.where(member, REACHABLE_BIT, 0)
+    word = word | jnp.where(core, CORE_BIT, 0)
+    return word.astype(jnp.int16)
+
+
+def unpack_state(word: jnp.ndarray):
+    w = word.astype(jnp.int32)
+    labels = w >> CLUSTER_SHIFT
+    return (
+        labels,
+        (w & VISITED_BIT) > 0,
+        (w & REACHABLE_BIT) > 0,
+        (w & CORE_BIT) > 0,
+    )
+
+
+def finish(word: jnp.ndarray) -> jnp.ndarray:
+    """Paper: 'The first three bits are deleted before the algorithm
+    finishes' — returns plain cluster ids (0 = noise)."""
+    return ((word.astype(jnp.int32) & ~FLAG_MASK) >> CLUSTER_SHIFT).astype(
+        jnp.int16
+    )
+
+
+# --- configuration -----------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DBSCANConfig:
+    eps: float
+    min_pts: int
+    use_kernel: bool = True
+    block_i: Optional[int] = None
+    block_j: Optional[int] = None
+
+    @staticmethod
+    def paper_defaults(features: int) -> "DBSCANConfig":
+        return DBSCANConfig(
+            eps=float(np.sqrt(features)), min_pts=10 * features
+        )
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("labels", "core_mask", "n_clusters", "expansions"),
+    meta_fields=("cancelled",),
+)
+@dataclasses.dataclass
+class DBSCANResult:
+    labels: jax.Array       # (n,) int16, 0 = noise, clusters 1..C
+    core_mask: jax.Array    # (n,) bool
+    n_clusters: jax.Array   # () i32
+    expansions: jax.Array   # () i32 — number of expansion-kernel launches
+    cancelled: bool = False
+
+
+def _degree(x, cfg: DBSCANConfig):
+    if cfg.use_kernel:
+        return epsilon_degree(x, cfg.eps, block_i=cfg.block_i,
+                              block_j=cfg.block_j)
+    return epsilon_degree_ref(x, cfg.eps)
+
+
+def _expand(x, frontier, cfg: DBSCANConfig):
+    if cfg.use_kernel:
+        return expand_frontier(x, frontier, cfg.eps, block_i=cfg.block_i,
+                               block_j=cfg.block_j)
+    return expand_frontier_ref(x, frontier, cfg.eps)
+
+
+# --- fully jitted solver -----------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit(x: jnp.ndarray, cfg: DBSCANConfig) -> DBSCANResult:
+    """Fully jitted DBSCAN (nested lax.while_loop)."""
+    n = x.shape[0]
+    deg = _degree(x, cfg)
+    core = deg >= cfg.min_pts
+
+    def expand_cluster(labels, visited, cid):
+        """BFS-expand the cluster seeded at the first unvisited core pt."""
+        seed = jnp.argmax(core & ~visited)
+        frontier = jnp.zeros((n,), bool).at[seed].set(True)
+
+        def cond(s):
+            frontier, _, _, _ = s
+            return frontier.any()
+
+        def body(s):
+            frontier, labels, visited, nexp = s
+            reached = _expand(x, frontier, cfg)
+            # unclaimed (noise or unvisited) points join this cluster
+            new = reached & (labels == 0)
+            labels = jnp.where(new, cid, labels)
+            visited = visited | new
+            # only newly-claimed core points keep expanding
+            return new & core, labels, visited, nexp + 1
+
+        frontier, labels, visited, nexp = jax.lax.while_loop(
+            cond, body, (frontier, labels, visited, jnp.int32(0))
+        )
+        return labels, visited, nexp
+
+    def outer_cond(s):
+        _, visited, _, _ = s
+        return (core & ~visited).any()
+
+    def outer_body(s):
+        labels, visited, cid, nexp = s
+        labels, visited, e = expand_cluster(labels, visited, cid + 1)
+        return labels, visited, cid + 1, nexp + e
+
+    labels0 = jnp.zeros((n,), jnp.int32)
+    visited0 = jnp.zeros((n,), bool)
+    labels, visited, cid, nexp = jax.lax.while_loop(
+        outer_cond, outer_body, (labels0, visited0, jnp.int32(0), jnp.int32(0))
+    )
+    return DBSCANResult(
+        labels=labels.astype(jnp.int16),
+        core_mask=core,
+        n_clusters=cid,
+        expansions=nexp,
+    )
+
+
+# --- host-driven, cancellable solver ----------------------------------------
+
+
+def fit_cancellable(
+    x: jnp.ndarray,
+    cfg: DBSCANConfig,
+    token: Optional[CancellationToken] = None,
+    on_progress: Optional[Callable[[int, int], None]] = None,
+) -> DBSCANResult:
+    """Host loop; the abort flag is polled between kernel executions, exactly
+    as in the paper.  State is carried in the paper's packed int16 word."""
+    n = x.shape[0]
+    deg = _degree(x, cfg)            # kernel launch 1 (main loop kernel)
+    core = deg >= cfg.min_pts
+
+    labels = jnp.zeros((n,), jnp.int32)
+    visited = jnp.zeros((n,), bool)
+    member = jnp.zeros((n,), bool)
+    cid = 0
+    nexp = 0
+    cancelled = False
+
+    expand = jax.jit(functools.partial(_expand, cfg=cfg))
+
+    def _poll() -> bool:
+        return token is not None and token.cancelled()
+
+    while True:
+        if _poll():
+            cancelled = True
+            break
+        todo = np.asarray(core & ~visited)
+        if not todo.any():
+            break
+        seed = int(np.argmax(todo))
+        cid += 1
+        frontier = jnp.zeros((n,), bool).at[seed].set(True)
+        while bool(frontier.any()):
+            if _poll():
+                cancelled = True
+                break
+            reached = expand(x, frontier)      # expansion kernel launch
+            nexp += 1
+            new = reached & (labels == 0)
+            labels = jnp.where(new, cid, labels)
+            visited = visited | new
+            member = member | new
+            frontier = new & core
+            if on_progress is not None:
+                on_progress(cid, nexp)
+        if cancelled:
+            break
+
+    packed = pack_state(labels, visited, member, core)
+    return DBSCANResult(
+        labels=finish(packed),
+        core_mask=core,
+        n_clusters=jnp.int32(cid),
+        expansions=jnp.int32(nexp),
+        cancelled=cancelled,
+    )
+
+
+# --- sequential oracle (numpy BFS; used by tests and benchmarks) -------------
+
+
+def fit_oracle(x: np.ndarray, cfg: DBSCANConfig) -> np.ndarray:
+    """Textbook sequential DBSCAN with the same seed ordering.  O(n^2)."""
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    adj = d2 <= cfg.eps ** 2
+    core = adj.sum(1) >= cfg.min_pts
+    labels = np.zeros(n, np.int32)
+    visited = np.zeros(n, bool)
+    cid = 0
+    for seed in range(n):
+        if not core[seed] or visited[seed]:
+            continue
+        cid += 1
+        frontier = np.zeros(n, bool)
+        frontier[seed] = True
+        while frontier.any():
+            reached = (adj & frontier[None, :]).any(1)
+            new = reached & (labels == 0)
+            labels[new] = cid
+            visited |= new
+            frontier = new & core
+    return labels

@@ -1,0 +1,192 @@
+"""Distributed clustering — the paper's kernels at pod scale.
+
+Two distribution strategies, recorded for the §Perf comparison:
+
+1. **pjit / GSPMD** (`make_sharded_kmeans_step`, `sharded_degree`): points are
+   sharded over the (pod, data) axes, centroids/frontier replicated; the
+   one-hot-matmul centroid update and the degree reduction become partial
+   sums + a single all-reduce inserted by GSPMD.  Zero custom communication —
+   the pod-scale version of the paper's "same kernel, different device"
+   portability.
+
+2. **Ring systolic** (`ring_degree`, `ring_expand`): for DBSCAN the full
+   (n, n) adjacency never fits anywhere; the pjit path would all-gather X
+   per device (n*d bytes) before tiling.  The ring variant keeps only
+   1/p-th of X per device and rotates column-shards with
+   `lax.ppermute` p times, so peak per-device live bytes drop from
+   n*d to 2*(n/p)*d while the permute of step s+1 can overlap the tile
+   compute of step s (XLA latency-hiding scheduler; verified in the dry-run
+   HLO).  This is the beyond-paper distributed optimization for the
+   technique's own dry-run cell.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.kmeans import KMeansConfig, kmeans_step
+from repro.kernels.distance.ref import assign_clusters_ref
+from repro.kernels.neighbor.ref import _sq_dists  # noqa: F401 (docs)
+
+
+# ---------------------------------------------------------------------------
+# Strategy 1: pjit / GSPMD
+# ---------------------------------------------------------------------------
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch-parallel axes of a production mesh ((pod,)data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_sharded_kmeans_step(mesh: Mesh, cfg: KMeansConfig):
+    """Jitted K-Means step with points sharded over (pod, data).
+
+    GSPMD inserts: an all-reduce of the (k, d) partial centroid sums and the
+    (k,) partial counts over the data axes.  Everything else is local.
+    """
+    daxes = data_axes(mesh)
+    x_sharding = NamedSharding(mesh, P(daxes, None))
+    c_sharding = NamedSharding(mesh, P())
+    a_sharding = NamedSharding(mesh, P(daxes))
+
+    def step(x, c):
+        return kmeans_step(x, c, cfg)
+
+    return jax.jit(
+        step,
+        in_shardings=(x_sharding, c_sharding),
+        out_shardings=(a_sharding, c_sharding, c_sharding, c_sharding),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Strategy 2: ring systolic (shard_map + ppermute)
+# ---------------------------------------------------------------------------
+
+def _pvary(x, axis: str):
+    """Mark a constant as device-varying over `axis` (shard_map VMA typing)."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, (axis,))
+    return jax.lax.pcast(x, (axis,), to="varying")  # newer spelling
+
+
+def _ring_body(x_rows, x_cols0, combine, init, axis: str):
+    """Rotate column shards around the ring, folding tiles into `init`."""
+    p = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    init = jax.tree.map(lambda a: _pvary(a, axis), init)
+
+    def body(step, carry):
+        acc, x_cols = carry
+        # which global column shard we currently hold
+        shard_idx = (me - step) % p
+        acc = combine(acc, x_rows, x_cols, shard_idx)
+        x_cols = jax.lax.ppermute(x_cols, axis, perm)
+        return acc, x_cols
+
+    acc, _ = jax.lax.fori_loop(0, p, body, (init, x_cols0))
+    return acc
+
+
+def _tile_adj(xi, xj, eps2):
+    xi = xi.astype(jnp.float32)
+    xj = xj.astype(jnp.float32)
+    cross = xi @ xj.T
+    d2 = (
+        jnp.sum(xi * xi, 1)[:, None]
+        - 2.0 * cross
+        + jnp.sum(xj * xj, 1)[None, :]
+    )
+    return d2 <= eps2
+
+
+def ring_degree(mesh: Mesh, x: jax.Array, eps: float, axis: str = "data"):
+    """deg[i] over row-sharded x without materializing replicated X."""
+    eps2 = float(eps) ** 2
+
+    def local(x_shard):
+        def combine(acc, rows, cols, _):
+            return acc + jnp.sum(
+                _tile_adj(rows, cols, eps2).astype(jnp.int32), axis=1
+            )
+
+        init = jnp.zeros((x_shard.shape[0],), jnp.int32)
+        return _ring_body(x_shard, x_shard, combine, init, axis)
+
+    f = shard_map(
+        local, mesh=mesh, in_specs=P(axis, None), out_specs=P(axis)
+    )
+    return jax.jit(f)(x)
+
+
+def ring_expand(
+    mesh: Mesh, x: jax.Array, frontier: jax.Array, eps: float,
+    axis: str = "data",
+):
+    """reach[i] = any_j adj[i,j] & frontier[j], ring-rotated like above."""
+    eps2 = float(eps) ** 2
+
+    def local(x_shard, f_shard):
+        def combine(acc, rows, cols_and_f, _):
+            cols, f = cols_and_f
+            hit = _tile_adj(rows, cols, eps2) & f[None, :]
+            return acc | jnp.any(hit, axis=1)
+
+        init = jnp.zeros((x_shard.shape[0],), bool)
+        return _ring_body(x_shard, (x_shard, f_shard), combine, init, axis)
+
+    f = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis)),
+        out_specs=P(axis),
+    )
+    return jax.jit(f)(x, frontier)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run entry: one distributed K-Means step as a lowerable function
+# ---------------------------------------------------------------------------
+
+def clustering_step_for_dryrun(cfg: KMeansConfig):
+    """A (x, c) -> (assign, c', shift, inertia) function for lower+compile.
+
+    Same math as the Pallas assignment kernel (MXU decomposition
+    ||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2): the cross term is one big
+    (n, d) x (d, k) matmul with points sharded over (pod, data) and
+    centroids sharded over 'model', so the (n, k) score matrix is 2-D
+    sharded and the naive (n, k, d) broadcast never exists.  The centroid
+    update is the one-hot matmul; its (k, d) partial sums all-reduce over
+    the data axes is the step's only meaningful collective.
+    """
+    from repro.parallel.sharding import lshard  # noqa: PLC0415
+
+    def step(x, c):
+        xf = x.astype(jnp.float32)
+        cf = c.astype(jnp.float32)
+        cross = jnp.einsum("nd,kd->nk", xf, cf,
+                           preferred_element_type=jnp.float32)
+        cross = lshard(cross, "points", "centroids")
+        cnorm = jnp.sum(cf * cf, axis=1)
+        score = cnorm[None, :] - 2.0 * cross          # argmin-equivalent
+        assign = jnp.argmin(score, axis=1)
+        xnorm = jnp.sum(xf * xf, axis=1)
+        d2min = jnp.maximum(jnp.min(score, axis=1) + xnorm, 0.0)
+
+        onehot = jax.nn.one_hot(assign, cfg.k, dtype=jnp.float32)
+        onehot = lshard(onehot, "points", "centroids")
+        sums = jnp.einsum("nk,nd->kd", onehot, xf)
+        counts = jnp.sum(onehot, axis=0)
+        has = counts > 0
+        c_new = jnp.where(has[:, None],
+                          sums / jnp.where(has, counts, 1.0)[:, None], cf)
+        return assign, c_new, jnp.sum(jnp.abs(c_new - cf)), jnp.sum(d2min)
+
+    return step

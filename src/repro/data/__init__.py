@@ -1,0 +1,4 @@
+from repro.data.synthetic import ClusterSpec, make_blobs
+from repro.data.tokens import TokenBatch, synthetic_token_batches
+
+__all__ = ["ClusterSpec", "make_blobs", "TokenBatch", "synthetic_token_batches"]

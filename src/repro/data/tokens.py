@@ -1,0 +1,69 @@
+"""Token pipeline for the LM substrate.
+
+Synthetic-corpus batches are pure functions of (key, step), which makes the
+pipeline *restartable by construction*: a resumed job replays the exact batch
+stream from the step counter in its checkpoint — the WorkManager property
+(jobs survive restarts) applied to data.
+
+For the [vlm]/[audio] backbones the same generator produces precomputed
+patch/frame embeddings (the modality frontends are stubs per the assignment;
+see models/frontends.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TokenBatch:
+    """One training batch.
+
+    tokens/labels: (batch, seq) int32; labels are tokens shifted left.
+    embeddings: optional (batch, frames, d_model) float for stub frontends.
+    """
+
+    tokens: jax.Array
+    labels: jax.Array
+    embeddings: Optional[jax.Array] = None
+
+
+def synthetic_token_batch(
+    key: jax.Array,
+    *,
+    batch: int,
+    seq: int,
+    vocab: int,
+    skew: float = 4.0,
+) -> TokenBatch:
+    """Power-law token ids: p(id) ∝ id^(1/skew - 1), O(B*S) sampling.
+
+    (Uniform ids make loss curves degenerate; a true Zipf categorical costs
+    O(B*S*V) — this inverse-CDF power law gives the heavy head at gather
+    cost.)
+    """
+    u = jax.random.uniform(key, (batch, seq), minval=1e-9, maxval=1.0)
+    ids = jnp.clip((vocab * u ** skew).astype(jnp.int32), 0, vocab - 1)
+    labels = jnp.concatenate([ids[:, 1:], ids[:, :1]], axis=1)
+    return TokenBatch(tokens=ids, labels=labels)
+
+
+def synthetic_token_batches(
+    key: jax.Array,
+    *,
+    batch: int,
+    seq: int,
+    vocab: int,
+    start_step: int = 0,
+) -> Iterator[TokenBatch]:
+    """Infinite, replayable batch stream keyed by step index."""
+    step = start_step
+    while True:
+        yield synthetic_token_batch(
+            jax.random.fold_in(key, step), batch=batch, seq=seq, vocab=vocab
+        )
+        step += 1

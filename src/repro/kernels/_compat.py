@@ -1,0 +1,42 @@
+"""Version-tolerant helpers for Pallas TPU compiler parameters.
+
+``pallas_call(compiler_params=...)`` changed shape across jax releases
+(dict -> pltpu.TPUCompilerParams -> pltpu.CompilerParams).  Kernels in this
+repo call :func:`tpu_compiler_params` so the TPU hints (dimension semantics
+for the Mosaic scheduler) survive version bumps, and are simply dropped in
+interpret mode where they are meaningless.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+
+def tpu_compiler_params(
+    dimension_semantics: Sequence[str], *, interpret: bool
+) -> Dict[str, Any]:
+    """kwargs for pallas_call carrying Mosaic dimension semantics."""
+    if interpret:
+        return {}
+    try:
+        from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+        if hasattr(pltpu, "CompilerParams"):
+            return {
+                "compiler_params": pltpu.CompilerParams(
+                    dimension_semantics=tuple(dimension_semantics)
+                )
+            }
+        if hasattr(pltpu, "TPUCompilerParams"):
+            return {
+                "compiler_params": pltpu.TPUCompilerParams(
+                    dimension_semantics=tuple(dimension_semantics)
+                )
+            }
+    except ImportError:
+        pass
+    return {
+        "compiler_params": {
+            "mosaic": {"dimension_semantics": tuple(dimension_semantics)}
+        }
+    }

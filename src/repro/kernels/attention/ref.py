@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel (causal, GQA)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,   # (B, Sq, H, D)
+    k: jnp.ndarray,   # (B, Sk, KV, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    causal_offset: int = 0,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    kf = jnp.repeat(k, group, axis=2) if group > 1 else k
+    vf = jnp.repeat(v, group, axis=2) if group > 1 else v
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        qpos = jnp.arange(sq) + causal_offset
+        kpos = jnp.arange(kf.shape[1])
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, vf.astype(jnp.float32)).astype(
+        q.dtype
+    )

@@ -1,0 +1,3 @@
+from repro.kernels.distance.ops import assign_clusters, pairwise_sq_dists
+
+__all__ = ["assign_clusters", "pairwise_sq_dists"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the K-Means assignment kernel.
+
+This is the paper's OpenCL K-Means kernel, verbatim in semantics: "one kernel
+that calculates in parallel the distance of a point to each cluster center
+and saves the cluster number with the lowest distance".
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distances, (n, d) x (k, d) -> (n, k), fp32 accum."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    # Stable direct form for the oracle (the kernel uses the MXU
+    # decomposition; the oracle intentionally uses the naive form so the two
+    # are independent implementations).
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign_clusters_ref(
+    x: jnp.ndarray, c: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (assignment int32 (n,), min squared distance f32 (n,))."""
+    d = pairwise_sq_dists_ref(x, c)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return idx, jnp.min(d, axis=1)

@@ -1,0 +1,3 @@
+from repro.kernels.neighbor.ops import epsilon_degree, expand_frontier
+
+__all__ = ["epsilon_degree", "expand_frontier"]

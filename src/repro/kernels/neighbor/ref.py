@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the DBSCAN neighborhood kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _sq_dists(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.float32)
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def epsilon_degree_ref(x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Number of points within eps (inclusive, self counted) per point."""
+    d2 = _sq_dists(x)
+    return jnp.sum(d2 <= jnp.float32(eps) ** 2, axis=1).astype(jnp.int32)
+
+
+def expand_frontier_ref(
+    x: jnp.ndarray, frontier: jnp.ndarray, eps: float
+) -> jnp.ndarray:
+    """Points within eps of any frontier point (bool (n,)).
+
+    The paper's cluster-expansion kernel: "examine if a data point is
+    (directly) reachable from a given core point", batched over the whole
+    frontier at once.
+    """
+    d2 = _sq_dists(x)
+    adj = d2 <= jnp.float32(eps) ** 2
+    return jnp.any(adj & frontier[None, :], axis=1)

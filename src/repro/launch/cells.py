@@ -1,0 +1,196 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowerable function.
+
+Shared by launch/dryrun.py (compile + analyze) and benchmarks/roofline.py
+(interpretation).  Everything here is ShapeDtypeStruct-abstract: no array is
+ever allocated for the full configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeSpec, cell_applicable, shape_by_name
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import resolve
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_axis_rules,
+    spec_for_shape,
+)
+from repro.train import step as train_step_mod
+from repro.train.step import (
+    abstract_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    train_batch_shapes,
+    train_state_axes,
+)
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeSpec,
+              overrides: Optional[Dict[str, Any]] = None,
+              tp: int = 16) -> ShardingRules:
+    """Per-shape rule adjustments (the deployable policy; §Perf logs how it
+    was derived from the naive baseline).
+
+    - train/prefill: Megatron sequence parallelism — the residual stream
+      between sub-layers shards over 'model' (seq_sp), dividing layer-
+      boundary activation saves by TP;
+    - decode, GQA archs (kv_heads % TP != 0): the KV cache shards over the
+      *sequence* dim on 'model' (flash-decode style) instead of replicating
+      2-8 KV heads per chip;
+    - decode, batch < data axis (long_500k batch=1): the sequence dim also
+      takes the idle 'data' axis.
+    """
+    rules = DEFAULT_RULES
+    if shape.kind in ("train", "prefill"):
+        rules = rules.override(seq_sp="model")
+    if shape.kind == "decode":
+        kv_shardable = (
+            cfg.n_kv_heads_padded and cfg.n_kv_heads_padded % tp == 0
+        )
+        seq_axes = [] if kv_shardable else ["model"]
+        if shape.global_batch < 16:
+            seq_axes = ["data"] + seq_axes
+            rules = rules.override(batch=("pod",))
+        if seq_axes:
+            rules = rules.override(seq_kv=tuple(seq_axes))
+    if overrides:
+        rules = rules.override(**overrides)
+    return rules
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Any                   # python callable to jit
+    args: Tuple[Any, ...]     # abstract args
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    rules: ShardingRules
+
+
+def _batch_sharding(mesh: Mesh, rules: ShardingRules, shapes: Dict[str, Any]):
+    out = {}
+    for name, sds in shapes.items():
+        if name == "prefix_embeds":
+            axes = ("batch", "seq", "embed")
+        else:
+            axes = ("batch", "seq")
+        spec = spec_for_shape(rules, axes, mesh, tuple(sds.shape))
+        out[name] = NamedSharding(mesh, spec)
+    return out
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    rule_overrides: Optional[Dict[str, Any]] = None,
+    cfg_overrides: Optional[Dict[str, Any]] = None,
+) -> Cell:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"inapplicable cell {arch}x{shape_name}: {why}")
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    rule_overrides = dict(rule_overrides or {})
+    zero3 = rule_overrides.pop("_zero3", False)
+    rules = rules_for(cfg, shape, rule_overrides, tp=tp)
+
+    params_abs = lm.abstract_params(cfg)
+    params_axes = lm.param_axes(cfg)
+    param_sh = resolve.tree_shardings(params_axes, params_abs, mesh, rules)
+    if zero3:
+        # ZeRO-3: parameters also shard over the data axes; GSPMD inserts
+        # per-layer all-gathers (fwd/bwd) and reduce-scatters the grads.
+        # Needed when TP-sharded params alone exceed HBM (jamba 52B: 6.5
+        # GiB bf16 params + 6.5 GiB grads on 16 GiB chips — §Perf).
+        param_sh = jax.tree_util.tree_map(
+            lambda sh, ab: jax.sharding.NamedSharding(
+                mesh, resolve.zero1_spec(sh.spec, tuple(ab.shape), mesh)
+            ),
+            param_sh, params_abs,
+        )
+
+    if shape.kind == "train":
+        state_abs = abstract_train_state(cfg)
+        state_axes = train_state_axes(cfg)
+        state_sh = resolve.train_state_shardings(state_axes, state_abs,
+                                                 mesh, rules, zero3=zero3)
+        batch_abs = train_batch_shapes(cfg, shape.global_batch, shape.seq_len)
+        batch_sh = _batch_sharding(mesh, rules, batch_abs)
+        fn = make_train_step(cfg, AdamWConfig())
+        return Cell(
+            arch=arch, shape=shape, fn=fn,
+            args=(state_abs, batch_abs),
+            in_shardings=(state_sh, batch_sh),
+            # explicit out sharding: donated state must alias its input
+            # buffers (inferred shardings can silently break aliasing and
+            # double the state in temps — §Perf)
+            out_shardings=(state_sh, None),
+            donate=(0,),
+            rules=rules,
+        )
+
+    if shape.kind == "prefill":
+        batch_abs = train_batch_shapes(cfg, shape.global_batch, shape.seq_len)
+        batch_abs.pop("labels")
+        batch_sh = _batch_sharding(mesh, rules, batch_abs)
+        fn = make_prefill_step(cfg, max_seq=shape.seq_len)
+        return Cell(
+            arch=arch, shape=shape, fn=fn,
+            args=(params_abs, batch_abs),
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=None,
+            donate=(),
+            rules=rules,
+        )
+
+    # decode
+    cache_abs = lm.abstract_decode_cache(cfg, shape.global_batch,
+                                         shape.seq_len)
+    cache_axes = lm.cache_axes(cfg, shape.global_batch, shape.seq_len)
+    cache_sh = resolve.tree_shardings(cache_axes, cache_abs, mesh, rules)
+    tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = NamedSharding(
+        mesh, spec_for_shape(rules, ("batch", "seq"), mesh,
+                             tuple(tok_abs.shape))
+    )
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    serve = make_serve_step(cfg)
+    return Cell(
+        arch=arch, shape=shape, fn=serve,
+        args=(params_abs, cache_abs, tok_abs, pos_abs),
+        in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),  # donated cache must alias
+        donate=(1,),
+        rules=rules,
+    )
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """jit + lower under the mesh context (constraints need it active)."""
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate,
+    )
+    with mesh, logical_axis_rules(cell.rules):
+        return jitted.lower(*cell.args)

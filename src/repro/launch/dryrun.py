@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count at first
+# initialization).  Nothing above this line may import jax or repro.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+        --shape train_4k --multi-pod
+
+Per cell it records to results/dryrun/<mesh>/<arch>__<shape>.json:
+- memory_analysis (bytes per device: args/outputs/temps/peak),
+- cost_analysis (HLO FLOPs, bytes accessed),
+- the collective inventory parsed from the optimized HLO,
+- wall compile time.
+
+EXPERIMENTS.md §Dry-run / §Roofline are generated from these files by
+benchmarks/roofline.py.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_NAMES, get_config  # noqa: E402
+from repro.configs.base import SHAPES, cell_applicable, shape_by_name  # noqa: E402
+from repro.launch import hlo as hlo_mod  # noqa: E402
+from repro.launch.cells import build_cell, lower_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _compile_once(arch, shape_name, mesh, rule_overrides, cfg_overrides):
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, rule_overrides, cfg_overrides)
+    lowered = lower_cell(cell, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        k: int(getattr(mem, k))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        )
+        if hasattr(mem, k)
+    }
+    cost = compiled.cost_analysis() or {}
+    cost_d = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+    }
+    coll = hlo_mod.analyze_collectives(compiled.as_text(), mesh.size)
+    return {
+        "seconds_lower": round(t_lower, 2),
+        "seconds_compile": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": cost_d,
+        "collectives": coll,
+    }
+
+
+def _derive_totals(f1: dict, f2: dict, n_groups: int) -> dict:
+    """Scan bodies are cost-counted ONCE by XLA (verified in
+    EXPERIMENTS.md §Method), so per-cell totals are derived from two
+    unrolled shallow compiles: total = f1 + (G-1) * (f2 - f1)."""
+    g = n_groups
+
+    def lin(a, b):
+        return a + (g - 1) * (b - a)
+
+    out = {
+        "flops": lin(f1["cost_analysis"]["flops"],
+                     f2["cost_analysis"]["flops"]),
+        "bytes_accessed": lin(f1["cost_analysis"]["bytes_accessed"],
+                              f2["cost_analysis"]["bytes_accessed"]),
+        "transcendentals": lin(f1["cost_analysis"]["transcendentals"],
+                               f2["cost_analysis"]["transcendentals"]),
+        "wire_bytes": lin(f1["collectives"]["total_wire_bytes"],
+                          f2["collectives"]["total_wire_bytes"]),
+        "per_op_wire_bytes": {},
+    }
+    ops = set(f1["collectives"]["per_op"]) | set(f2["collectives"]["per_op"])
+    for op in ops:
+        a = f1["collectives"]["per_op"].get(op, {}).get("wire_bytes", 0.0)
+        b = f2["collectives"]["per_op"].get(op, {}).get("wire_bytes", 0.0)
+        out["per_op_wire_bytes"][op] = lin(a, b)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rule_overrides=None, cfg_overrides=None, tag: str = "",
+             analysis: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+
+    # Pass A: the deployable program (scan-over-layers) — compile proof +
+    # memory analysis + collective schedule.
+    full = _compile_once(arch, shape_name, mesh, rule_overrides,
+                         cfg_overrides)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "devices": mesh.size,
+        "tag": tag,
+        "status": "ok",
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "n_groups": cfg.n_groups,
+        **full,
+    }
+
+    if analysis:
+        # Passes B/C: unrolled shallow compiles for exact cost totals
+        # (scan bodies are counted once by XLA cost analysis).
+        seq = shape_by_name(shape_name).seq_len
+        ana = dict(cfg_overrides or {})
+        ana.update(scan_layers=False, ssm_chunk=max(seq, 128), attn_chunk=0,
+                   loss_chunk=0, moe_chunk=0)
+        f1 = _compile_once(arch, shape_name, mesh, rule_overrides,
+                           {**ana, "n_layers": cfg.period})
+        f2 = _compile_once(arch, shape_name, mesh, rule_overrides,
+                           {**ana, "n_layers": 2 * cfg.period})
+        result["analysis_depth1"] = f1
+        result["analysis_depth2"] = f2
+        result["derived"] = _derive_totals(f1, f2, cfg.n_groups)
+    return result
+
+
+def save_result(result: dict, out_dir: str) -> str:
+    mesh_dir = os.path.join(out_dir, result["mesh"])
+    os.makedirs(mesh_dir, exist_ok=True)
+    tag = f"__{result['tag']}" if result.get("tag") else ""
+    path = os.path.join(
+        mesh_dir, f"{result['arch']}__{result['shape']}{tag}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    return path
+
+
+def iter_cells():
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_applicable(cfg, shape)
+            yield arch, shape.name, ok, why
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod]
+    if args.both_meshes or args.all:
+        meshes = [False, True]
+
+    if args.all:
+        cells = [(a, s) for a, s, ok, _ in iter_cells() if ok]
+        skips = [(a, s, why) for a, s, ok, why in iter_cells() if not ok]
+        for a, s, why in skips:
+            print(f"SKIP {a} x {s}: {why}", flush=True)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for multi_pod in meshes:
+        mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+        for arch, shape in cells:
+            out_path = os.path.join(
+                args.out, mesh_name, f"{arch}__{shape}.json"
+            )
+            if args.skip_existing and os.path.exists(out_path):
+                print(f"SKIP(existing) {arch} x {shape} [{mesh_name}]",
+                      flush=True)
+                continue
+            label = f"{arch} x {shape} [{mesh_name}]"
+            try:
+                # roofline analysis passes only needed on the single pod
+                result = run_cell(arch, shape, multi_pod,
+                                  analysis=not multi_pod)
+                path = save_result(result, args.out)
+                flops = result.get("derived", result["cost_analysis"])["flops"]
+                print(
+                    f"OK   {label}: compile={result['seconds_compile']}s "
+                    f"flops={flops:.3e} "
+                    f"wire={result['collectives']['total_wire_bytes']:.3e}B "
+                    f"-> {os.path.relpath(path)}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures.append((label, repr(e)))
+                os.makedirs(os.path.join(args.out, mesh_name), exist_ok=True)
+                with open(out_path, "w") as f:
+                    json.dump({
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "fail", "error": traceback.format_exc(),
+                    }, f, indent=2)
+                print(f"FAIL {label}: {e!r}", flush=True)
+
+    print(f"\n{len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    if failures:
+        for label, err in failures:
+            print(f"  FAILED: {label}: {err[:200]}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""HLO text analysis: collective inventory for the roofline's third term.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+accounting, so we parse the optimized HLO: every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute instruction, its result
+bytes, and its participant-group size, then convert to per-device wire bytes
+with the standard ring-algorithm factors.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,128]{2,1,0} all-gather(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _tuple_bytes(inner: str) -> int:
+    # tuple result: "(f32[128]{0}, f32[128]{0})"
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", inner):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[num_groups, group_size]<=[...]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        first = m.group(1).strip()
+        if first:
+            return len(first.split(","))
+    if _SRC_TGT_RE.search(line):
+        return 2  # permute: pairwise
+    return total_devices
+
+
+def wire_bytes(op: str, result_bytes: int, group: int) -> float:
+    """Per-device bytes on the wire, ring-algorithm convention."""
+    g = max(group, 1)
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if op == "all-gather":
+        return result_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return result_bytes * (g - 1)   # input = result * g
+    if op == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if op == "collective-permute":
+        return float(result_bytes)
+    return float(result_bytes)
+
+
+def analyze_collectives(hlo_text: str, total_devices: int) -> Dict:
+    """Returns {'ops': [...], 'per_op': {op: {count, result_bytes,
+    wire_bytes}}, 'total_wire_bytes': float}."""
+    per_op: Dict[str, Dict] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+    )
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        # async pairs: count the -start, skip the -done
+        if "-done(" in line:
+            continue
+        tuple_inner, dtype, dims, op = m.groups()
+        if tuple_inner is not None:
+            rb = _tuple_bytes(tuple_inner)
+        else:
+            rb = _shape_bytes(dtype, dims)
+        g = _group_size(line, total_devices)
+        w = wire_bytes(op, rb, g)
+        ent = per_op[op]
+        ent["count"] += 1
+        ent["result_bytes"] += rb
+        ent["wire_bytes"] += w
+    total = sum(e["wire_bytes"] for e in per_op.values())
+    return {
+        "per_op": dict(per_op),
+        "total_wire_bytes": total,
+    }

@@ -1,0 +1,162 @@
+"""End-to-end training driver: jobs + checkpoints + preemption + watchdog.
+
+This is the paper's app loop at cluster scale.  The lifecycle mirrors
+§II.A exactly:
+
+1. attach to the job store; sweep orphans (the activity's reattach);
+2. claim a job (new or SUSPENDED); restore its checkpoint if resuming;
+3. hold a wake lock (HoldAlive heartbeats) and run steps, polling the
+   cancellation token *between* jitted steps;
+4. on SIGTERM/cancel: emergency-checkpoint, mark SUSPENDED, exit clean;
+5. on completion: final checkpoint, mark SUCCEEDED.
+
+Run small on CPU (smoke config):
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+        --steps 20 --workdir /tmp/run1
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.elastic import emergency_save
+from repro.checkpoint.store import AsyncCheckpointer, CheckpointStore
+from repro.configs import get_config, get_smoke_config
+from repro.core.cancellation import CancellationToken, CancelReason
+from repro.core.jobs import JobState, JobStore
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import make_schedule
+from repro.runtime import backend as backend_mod
+from repro.runtime.preemption import HoldAlive, PreemptionGuard
+from repro.runtime.watchdog import StepWatchdog
+from repro.train.step import (
+    TrainState,
+    init_train_state,
+    make_train_batch,
+    make_train_step,
+)
+
+
+def run_training_job(
+    *,
+    arch: str,
+    smoke: bool,
+    steps: int,
+    batch: int,
+    seq: int,
+    workdir: str,
+    schedule: str = "wsd",
+    ckpt_every: int = 10,
+    resume_job: bool = True,
+    token: CancellationToken | None = None,
+) -> dict:
+    backend_mod.load()  # wrapper-library discipline: explicit device init
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+
+    jobs = JobStore(os.path.join(workdir, "jobs.db"))
+    orphans = jobs.recover_orphans()
+    if orphans:
+        print(f"recovered orphaned jobs: {orphans}")
+
+    job = jobs.claim_next(kind="train") if resume_job else None
+    if job is None:
+        jid = jobs.enqueue("train", {
+            "arch": arch, "steps": steps, "batch": batch, "seq": seq,
+        })
+        job = jobs.claim_next(kind="train")
+        assert job is not None and job.job_id == jid
+    start_step = job.step
+    print(f"job {job.job_id}: starting at step {start_step}/{steps}")
+
+    store = CheckpointStore(os.path.join(workdir, "ckpt"))
+    ckpt = AsyncCheckpointer(store)
+    token = token or CancellationToken()
+
+    sched = make_schedule(schedule, steps)
+    train_step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3), sched))
+
+    key = jax.random.PRNGKey(hash(arch) % 2**31)
+    state = init_train_state(key, cfg)
+    if start_step > 0 and store.latest_step() is not None:
+        state = store.restore(store.latest_step(), state)
+        print(f"restored checkpoint step {store.latest_step()}")
+
+    wd = StepWatchdog(
+        lambda el, med: print(f"straggler: step {el:.2f}s vs median {med:.2f}s"),
+        factor=10.0,
+    )
+    losses = []
+    final_state = JobState.SUCCEEDED
+    with PreemptionGuard(token), HoldAlive(jobs, job.job_id), wd:
+        step = start_step
+        while step < steps:
+            # the paper's contract: flag polled between kernel executions
+            if token.cancelled():
+                final_state = JobState.SUSPENDED
+                break
+            wd.step_begin()
+            batch_data = make_train_batch(
+                jax.random.fold_in(key, step), cfg, batch, seq
+            )
+            state, metrics = train_step(state, batch_data)
+            wd.step_end()
+            step += 1
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            jobs.report_progress(job.job_id, step=step, loss=loss)
+            if step % ckpt_every == 0 or step == steps:
+                ckpt.submit(step, state, metadata={"arch": cfg.name,
+                                                   "loss": loss})
+                jobs.report_progress(
+                    job.job_id,
+                    checkpoint_path=os.path.join(store.root, f"step_{step}"),
+                )
+
+        ckpt.wait()
+        if final_state == JobState.SUSPENDED:
+            path = emergency_save(store, step, state, token.reason.value)
+            jobs.report_progress(job.job_id, step=step, checkpoint_path=path)
+            print(f"suspended at step {step}; emergency checkpoint: {path}")
+        jobs.transition(job.job_id, final_state)
+
+    return {
+        "job_id": job.job_id,
+        "final_state": final_state.value,
+        "steps_done": step,
+        "losses": losses,
+        "stragglers": wd.straggler_events,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--schedule", default="wsd")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+    out = run_training_job(
+        arch=args.arch, smoke=args.smoke, steps=args.steps,
+        batch=args.batch, seq=args.seq, workdir=args.workdir,
+        schedule=args.schedule, ckpt_every=args.ckpt_every,
+    )
+    first = out["losses"][0] if out["losses"] else float("nan")
+    last = out["losses"][-1] if out["losses"] else float("nan")
+    print(f"done: {out['final_state']} steps={out['steps_done']} "
+          f"loss {first:.4f} -> {last:.4f}")
+
+
+if __name__ == "__main__":
+    main()

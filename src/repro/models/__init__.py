@@ -1,0 +1,17 @@
+from repro.models.lm import (
+    DecodeCache,
+    init_params,
+    param_axes,
+    forward,
+    init_decode_cache,
+    decode_step,
+)
+
+__all__ = [
+    "DecodeCache",
+    "init_params",
+    "param_axes",
+    "forward",
+    "init_decode_cache",
+    "decode_step",
+]

@@ -1,0 +1,41 @@
+"""Modality frontend STUBS for the [vlm]/[audio] backbones.
+
+Per the assignment, the transformer BACKBONE is what's specified; the
+modality frontend supplies *precomputed* patch/frame embeddings through
+``input_specs()``:
+
+- internvl2-26b [vlm]: the real frontend is InternViT-6B producing patch
+  embeddings projected to d_model; here a (batch, prefix_len, d_model)
+  embedding tensor arrives as an input (prefix_len=256 patches/image).
+- musicgen-medium [audio]: the real frontend is EnCodec; the backbone is a
+  decoder over EnCodec tokens (vocab 2048) with a conditioning prefix of
+  (batch, prefix_len, d_model) frame embeddings (prefix_len=64).
+
+The prefix embeddings are concatenated ahead of the token embeddings; loss
+and decode operate on token positions only (see models.lm).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def prefix_embed_shape(
+    cfg: ModelConfig, batch: int
+) -> Optional[Tuple[int, int, int]]:
+    if cfg.frontend == "none" or cfg.prefix_len == 0:
+        return None
+    return (batch, cfg.prefix_len, cfg.d_model)
+
+
+def synthetic_prefix(key: jax.Array, cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Optional[jax.Array]:
+    shape = prefix_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.02

@@ -1,0 +1,260 @@
+"""Model primitives: norms, RoPE, GQA attention, MLPs.
+
+All functions are pure; parameters are plain dict pytrees declared via
+models.declare so init/sharding/dry-run stay consistent.  Activations are
+annotated with logical axes through parallel.sharding.lshard (no-op on a
+single device).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.declare import DeclTree, ParamDecl
+from repro.parallel.sharding import lshard
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def norm_decls(cfg: ModelConfig) -> DeclTree:
+    if cfg.norm == "nonparam_ln":
+        return {}  # OLMo: non-parametric LayerNorm — no learned scale/bias
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDecl((cfg.d_model,), ("embed",), "ones"),
+            "bias": ParamDecl((cfg.d_model,), ("embed",), "zeros"),
+        }
+    return {"scale": ParamDecl((cfg.d_model,), ("embed",), "ones")}
+
+
+def apply_norm(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6)
+        out = out * params["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + 1e-6)
+        if cfg.norm == "layernorm":
+            out = out * params["scale"].astype(jnp.float32) + params[
+                "bias"
+            ].astype(jnp.float32)
+        # nonparam_ln: no affine (OLMo, arXiv:2402.00838)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given positions: (..., d_head/2)."""
+    half = cfg.d_head // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:              # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, optional query chunking)
+# ---------------------------------------------------------------------------
+
+
+def attention_decls(cfg: ModelConfig) -> DeclTree:
+    d, hd = cfg.d_model, cfg.d_head
+    h, kv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    return {
+        "wq": ParamDecl((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDecl((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDecl((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDecl((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _head_mask(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Zero the padded heads' contribution (exact published semantics)."""
+    if cfg.n_heads_padded == cfg.n_heads:
+        return x
+    mask = jnp.arange(cfg.n_heads_padded) < cfg.n_heads
+    return x * mask[None, None, :, None].astype(x.dtype)
+
+
+def _qkv(params: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    cos, sin = rope_freqs(cfg, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = lshard(q, "batch", "seq", "heads", "head_dim")
+    k = lshard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = lshard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head H/KV times.
+
+    Flat-head layout keeps the score einsum sharded purely on the head axis
+    (no grouped reshape of a sharded dim, which GSPMD can only fix with an
+    all-gather + dynamic-slice).  When KV heads are replicated (kv < TP),
+    the repeat is a local broadcast.
+    """
+    b, s, kvh, dh = k.shape
+    if kvh == n_heads:
+        return k
+    group = n_heads // kvh
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvh, group, dh))
+    return k.reshape(b, s, n_heads, dh)
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, *, causal_offset: int = 0):
+    """Scaled-dot-product attention, causal, GQA via repeat-KV.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D).  Queries at absolute position
+    causal_offset + i attend to keys at positions <= that.
+    """
+    b, sq, h, dh = q.shape
+    kf = _repeat_kv(k, h)
+    vf = _repeat_kv(v, h)
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q, kf, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    qpos = jnp.arange(sq) + causal_offset
+    kpos = jnp.arange(sk := kf.shape[1])
+    mask = kpos[None, :] <= qpos[:, None]  # (Sq, Sk)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, vf)
+    return out
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, chunk: int):
+    """Query-chunked attention: scan over query blocks so the live score
+    buffer is (B, H, chunk, Sk) instead of (B, H, Sq, Sk).  Memory-term
+    lever for the 32k prefill cells (see EXPERIMENTS.md §Perf)."""
+    b, sq, h, dh = q.shape
+    assert sq % chunk == 0, (sq, chunk)
+    nchunk = sq // chunk
+    qs = q.reshape(b, nchunk, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(i, _):
+        out = _sdpa(qs[i], k, v, cfg, causal_offset=i * chunk)
+        return out
+
+    outs = jax.lax.map(lambda i: body(i, None), jnp.arange(nchunk))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def attention(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+) -> jax.Array:
+    """Full-sequence (training/prefill) attention."""
+    q, k, v = _qkv(params, x, cfg, positions)
+    if cfg.attn_chunk and x.shape[1] > cfg.attn_chunk:
+        out = _sdpa_chunked(q, k, v, cfg, cfg.attn_chunk)
+    else:
+        out = _sdpa(q, k, v, cfg)
+    out = _head_mask(cfg, out)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    # seq_sp: Megatron sequence parallelism — the residual stream between
+    # sub-layers is sharded over 'model' (rules_for enables it for
+    # train/prefill); GSPMD turns the wo partial-sum all-reduce into a
+    # reduce-scatter and the next qkv into an all-gather.
+    return lshard(y, "batch", "seq_sp", "embed")
+
+
+def attention_decode(
+    params: Dict,
+    x: jax.Array,            # (B, 1, d)
+    cfg: ModelConfig,
+    k_cache: jax.Array,      # (B, S, KV, D)
+    v_cache: jax.Array,
+    pos: jax.Array,          # () current position
+):
+    """One-token decode against a KV cache; returns (y, k_cache, v_cache)."""
+    positions = jnp.full((x.shape[1],), pos, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1
+    )
+    k_cache = lshard(k_cache, "batch", "seq_kv", "kv_heads", "head_dim")
+    v_cache = lshard(v_cache, "batch", "seq_kv", "kv_heads", "head_dim")
+
+    b, sq, h, dh = q.shape
+    kf = _repeat_kv(k_cache, h)
+    vf = _repeat_kv(v_cache, h)
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q, kf, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    kpos = jnp.arange(kf.shape[1])
+    mask = kpos[None, :] <= pos  # attend to everything written so far
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, vf)
+    out = _head_mask(cfg, out)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_decls(cfg: ModelConfig, d_ff: Optional[int] = None) -> DeclTree:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": ParamDecl((d, f), ("embed", "ff")),
+            "w_up": ParamDecl((d, f), ("embed", "ff")),
+            "w_down": ParamDecl((f, d), ("ff", "embed")),
+        }
+    return {
+        "w_up": ParamDecl((d, f), ("embed", "ff")),
+        "w_down": ParamDecl((f, d), ("ff", "embed")),
+    }
+
+
+def mlp(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    h = lshard(h, "batch", "seq", "ff")
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+    return lshard(y, "batch", "seq_sp", "embed")

@@ -1,0 +1,433 @@
+"""The unified decoder: every assigned architecture is an instance of this.
+
+One scan period = ``cfg.pattern`` sub-layers (attn/mamba mixer + optional
+dense/MoE FFN).  Parameters for one period are stacked over
+``cfg.n_groups`` and the stack is consumed by ``lax.scan`` — compile time
+and HLO size are O(period), not O(n_layers), which is what makes 64 dry-run
+compiles on one CPU core feasible (and is the right structure on real pods
+too: one program per unique layer).
+
+Entry points:
+- :func:`forward`       — training/prefill logits (+ aux losses)
+- :func:`prefill_step`  — forward AND build the decode cache
+- :func:`decode_step`   — one-token step against the cache
+- :func:`init_params` / :func:`abstract_params` / :func:`param_axes` —
+  concrete init, dry-run ShapeDtypeStructs, and logical sharding axes, all
+  from the same declarations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import declare
+from repro.models.declare import DeclTree, ParamDecl
+from repro.models.layers import (
+    apply_norm,
+    attention,
+    attention_decode,
+    attention_decls,
+    mlp,
+    mlp_decls,
+    norm_decls,
+)
+from repro.models.mamba import (
+    mamba_block,
+    mamba_decls,
+    mamba_decode_step,
+)
+from repro.models.moe import moe_decls, moe_ffn
+from repro.parallel.sharding import lshard
+
+DecodeCache = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+
+def _sub_decls(cfg: ModelConfig, mixer: str, ff: Optional[str]) -> DeclTree:
+    d: DeclTree = {"norm1": norm_decls(cfg)}
+    if mixer == "attn":
+        d["attn"] = attention_decls(cfg)
+    else:
+        d["mamba"] = mamba_decls(cfg)
+    if ff == "dense":
+        d["norm2"] = norm_decls(cfg)
+        d["mlp"] = mlp_decls(cfg)
+    elif ff == "moe":
+        d["norm2"] = norm_decls(cfg)
+        d["moe"] = moe_decls(cfg)
+    return d
+
+
+def model_decls(cfg: ModelConfig) -> DeclTree:
+    group: DeclTree = {
+        f"sub_{i}": _sub_decls(cfg, mixer, ff)
+        for i, (mixer, ff) in enumerate(cfg.pattern)
+    }
+    stacked = jax.tree_util.tree_map(
+        lambda p: declare.stack_layers(p, cfg.n_groups),
+        group,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+    decls: DeclTree = {
+        "embed": ParamDecl((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                           "normal", scale=0.02),
+        "layers": stacked,
+        "final_norm": norm_decls(cfg),
+    }
+    if not cfg.tie_embeddings:
+        decls["lm_head"] = ParamDecl(
+            (cfg.d_model, cfg.vocab_padded), ("embed", "vocab")
+        )
+    return decls
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict:
+    return declare.init_tree(key, model_decls(cfg), _dtype(cfg))
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return declare.abstract_tree(model_decls(cfg), _dtype(cfg))
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    return declare.axes_tree(model_decls(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_sub(
+    sub: Dict, x: jax.Array, cfg: ModelConfig, idx: int, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    mixer, ff = cfg.pattern[idx]
+    h = apply_norm(sub.get("norm1", {}), x, cfg)
+    if mixer == "attn":
+        y = attention(sub["attn"], h, cfg, positions)
+    else:
+        y = mamba_block(sub["mamba"], h, cfg)
+    x = x + y
+    aux = jnp.float32(0.0)
+    if ff is not None:
+        h = apply_norm(sub.get("norm2", {}), x, cfg)
+        if ff == "dense":
+            y = mlp(sub["mlp"], h, cfg)
+        else:
+            y, aux = moe_ffn(sub["moe"], h, cfg)
+        x = x + y
+    return x, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    return jax.checkpoint(fn)  # "full": save only layer boundaries
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill logits)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params: Dict, tokens: jax.Array, cfg: ModelConfig):
+    emb = params["embed"]
+    x = emb[tokens].astype(_dtype(cfg))
+    return lshard(x, "batch", "seq_sp", "embed")
+
+
+def _logits(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        # mask padded vocab columns: exact published-model semantics
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return lshard(logits, "batch", "seq", "vocab")
+
+
+def hidden_forward(
+    params: Dict,
+    tokens: jax.Array,                      # (B, S_text) int32
+    cfg: ModelConfig,
+    prefix_embeds: Optional[jax.Array] = None,  # (B, P, d) stub frontend
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (final normed hidden states (B, S, d), aux_loss ())."""
+    x = _embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    seq = x.shape[1]
+    positions = jnp.arange(seq, dtype=jnp.int32)
+
+    def _sub_fn(i):
+        def f(sub, h, pos):
+            return _apply_sub(sub, h, cfg, i, pos)
+
+        if cfg.remat == "full" and cfg.period > 1:
+            # nested remat: the backward of a heterogeneous group otherwise
+            # holds all `period` sub-layers' recompute graphs live at once
+            # (measured 154 GiB/chip on jamba train_4k — §Perf)
+            return jax.checkpoint(f)
+        return f
+
+    sub_fns = [_sub_fn(i) for i in range(cfg.period)]
+
+    def group_body(carry, group_params):
+        h, aux = carry
+        for i in range(cfg.period):
+            h, a = sub_fns[i](group_params[f"sub_{i}"], h, positions)
+            aux = aux + a
+        return (h, aux), None
+
+    body = _remat(group_body, cfg)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                   params["layers"])
+    else:
+        aux = jnp.float32(0.0)
+        for g in range(cfg.n_groups):
+            gp = jax.tree_util.tree_map(lambda p: p[g], params["layers"])
+            (x, aux), _ = body((x, aux), gp)
+
+    x = apply_norm(params.get("final_norm", {}), x, cfg)
+    return x, aux
+
+
+def forward(
+    params: Dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, vocab_padded) f32, aux_loss ())."""
+    x, aux = hidden_forward(params, tokens, cfg, prefix_embeds)
+    return _logits(params, x, cfg), aux
+
+
+def unembed(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Public logits head (used by the chunked loss)."""
+    return _logits(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+
+def _sub_cache_decls(cfg: ModelConfig, mixer: str, batch: int, max_seq: int):
+    dt = _dtype(cfg)
+    if mixer == "attn":
+        kv_shape = (batch, max_seq, cfg.n_kv_heads_padded, cfg.d_head)
+        axes = ("batch", "seq_kv", "kv_heads", "head_dim")
+        return {
+            "k": ParamDecl(kv_shape, axes, "zeros"),
+            "v": ParamDecl(kv_shape, axes, "zeros"),
+        }
+    return {
+        "conv": ParamDecl((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                          ("batch", None, "ssm_inner"), "zeros"),
+        "ssm": ParamDecl((batch, cfg.d_inner, cfg.ssm_state),
+                         ("batch", "ssm_inner", "ssm_state"), "zeros"),
+    }
+
+
+def cache_decls(cfg: ModelConfig, batch: int, max_seq: int) -> DeclTree:
+    group = {
+        f"sub_{i}": _sub_cache_decls(cfg, mixer, batch, max_seq)
+        for i, (mixer, _) in enumerate(cfg.pattern)
+    }
+    return jax.tree_util.tree_map(
+        lambda p: declare.stack_layers(p, cfg.n_groups),
+        group,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int) -> DecodeCache:
+    # NOTE: ssm states are f32 (recurrence numerics); kv caches model dtype.
+    decls = cache_decls(cfg, batch, max_seq)
+
+    def make(d: ParamDecl):
+        dt = jnp.float32 if d.axes[-1] == "ssm_state" else _dtype(cfg)
+        return jnp.zeros(d.shape, dt)
+
+    return jax.tree_util.tree_map(
+        make, decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+
+
+def abstract_decode_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    decls = cache_decls(cfg, batch, max_seq)
+
+    def make(d: ParamDecl):
+        dt = jnp.float32 if d.axes[-1] == "ssm_state" else _dtype(cfg)
+        return jax.ShapeDtypeStruct(d.shape, dt)
+
+    return jax.tree_util.tree_map(
+        make, decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+
+
+def cache_axes(cfg: ModelConfig, batch: int, max_seq: int):
+    return declare.axes_tree(cache_decls(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params: Dict,
+    cache: DecodeCache,
+    tokens: jax.Array,    # (B, 1) int32
+    pos: jax.Array,       # () int32 — position being written
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, DecodeCache]:
+    """One-token decode.  Returns (logits (B, 1, vocab), updated cache)."""
+    x = _embed_tokens(params, tokens, cfg)
+
+    def group_body(h, xs):
+        gp, gc = xs
+        new_gc = {}
+        for i, (mixer, ff) in enumerate(cfg.pattern):
+            sub, sc = gp[f"sub_{i}"], gc[f"sub_{i}"]
+            hn = apply_norm(sub.get("norm1", {}), h, cfg)
+            if mixer == "attn":
+                y, k, v = attention_decode(sub["attn"], hn, cfg,
+                                           sc["k"], sc["v"], pos)
+                new_gc[f"sub_{i}"] = {"k": k, "v": v}
+            else:
+                y, conv, ssm = mamba_decode_step(sub["mamba"], hn, cfg,
+                                                 sc["conv"], sc["ssm"])
+                new_gc[f"sub_{i}"] = {"conv": conv, "ssm": ssm}
+            h = h + y
+            if ff is not None:
+                hn = apply_norm(sub.get("norm2", {}), h, cfg)
+                if ff == "dense":
+                    y = mlp(sub["mlp"], hn, cfg)
+                else:
+                    y, _ = moe_ffn(sub["moe"], hn, cfg, no_drop=True)
+                h = h + y
+        return h, new_gc
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(group_body, x, (params["layers"], cache))
+    else:  # unrolled (analysis mode: exact HLO cost accounting)
+        new_gcs = []
+        for g in range(cfg.n_groups):
+            take = lambda t: jax.tree_util.tree_map(lambda p: p[g], t)
+            x, gc = group_body(x, (take(params["layers"]), take(cache)))
+            new_gcs.append(gc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_gcs
+        )
+    x = apply_norm(params.get("final_norm", {}), x, cfg)
+    return _logits(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (forward + cache construction)
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(
+    params: Dict,
+    tokens: jax.Array,                      # (B, S_text)
+    cfg: ModelConfig,
+    max_seq: Optional[int] = None,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, DecodeCache]:
+    """Forward over the prompt, returning (last-position logits, cache).
+
+    The cache is sized ``max_seq`` (>= prompt length) so decode can continue
+    in place.  Mamba sub-layers cache (conv tail, final h); attention caches
+    the full K/V prefix.
+    """
+    from repro.models.layers import _qkv  # local: shares rope/proj path
+
+    b, s_text = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    seq = x.shape[1]
+    max_seq = max_seq or seq
+    assert max_seq >= seq
+    positions = jnp.arange(seq, dtype=jnp.int32)
+
+    def group_body(h, gp):
+        new_gc = {}
+        for i, (mixer, ff) in enumerate(cfg.pattern):
+            sub = gp[f"sub_{i}"]
+            hn = apply_norm(sub.get("norm1", {}), h, cfg)
+            if mixer == "attn":
+                q, k, v = _qkv(sub["attn"], hn, cfg, positions)
+                from repro.models.layers import _sdpa, _sdpa_chunked
+
+                if cfg.attn_chunk and seq > cfg.attn_chunk:
+                    o = _sdpa_chunked(q, k, v, cfg, cfg.attn_chunk)
+                else:
+                    o = _sdpa(q, k, v, cfg)
+                y = jnp.einsum("bshk,hkd->bsd", o,
+                               sub["attn"]["wo"].astype(h.dtype))
+                pad = max_seq - seq
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                new_gc[f"sub_{i}"] = {
+                    "k": lshard(kc, "batch", "seq_kv", "kv_heads", "head_dim"),
+                    "v": lshard(vc, "batch", "seq_kv", "kv_heads", "head_dim"),
+                }
+            else:
+                y, conv_st, ssm_st = _mamba_prefill(sub["mamba"], hn, cfg)
+                new_gc[f"sub_{i}"] = {"conv": conv_st, "ssm": ssm_st}
+            h = h + y
+            if ff is not None:
+                hn = apply_norm(sub.get("norm2", {}), h, cfg)
+                if ff == "dense":
+                    y = mlp(sub["mlp"], hn, cfg)
+                else:
+                    y, _ = moe_ffn(sub["moe"], hn, cfg)
+                h = h + y
+        return h, new_gc
+
+    if cfg.scan_layers:
+        x, cache = jax.lax.scan(group_body, x, params["layers"])
+    else:
+        gcs = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree_util.tree_map(lambda p: p[g], params["layers"])
+            x, gc = group_body(x, gp)
+            gcs.append(gc)
+        cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *gcs)
+    x = apply_norm(params.get("final_norm", {}), x, cfg)
+    logits = _logits(params, x[:, -1:, :], cfg)
+    return logits, cache
+
+
+def _mamba_prefill(sub: Dict, x: jax.Array, cfg: ModelConfig):
+    """Mamba forward returning decode states — single pass (no duplicate
+    recompute graph; the old two-pass version held both alive and doubled
+    prefill transients — §Perf)."""
+    return mamba_block(sub, x, cfg, return_state=True)

@@ -1,0 +1,207 @@
+"""Mamba-1 selective SSM block (falcon-mamba, jamba mixer).
+
+TPU adaptation notes (the paper-mapping discipline of DESIGN.md §2 applied
+to this substrate): the original Mamba CUDA kernel is a hardware-aware
+recurrence that keeps h in SRAM.  The TPU-native equivalent used here:
+
+- the recurrence h_t = a_t * h_{t-1} + b_t (a_t = exp(dt_t * A), diagonal A)
+  is a first-order linear recurrence, computed with
+  `jax.lax.associative_scan` *within chunks* of ssm_chunk tokens and a
+  `lax.scan` carrying h across chunks.  This bounds the materialized state
+  tensor to (B, chunk, d_inner, d_state) — the VMEM-residency argument of
+  the CUDA kernel, restated as a chunking schedule for XLA;
+- chunk bodies are rematerialized in the backward pass (jax.checkpoint), so
+  training memory stays O(B * L * d_inner) for activations, not
+  O(B * L * d_inner * d_state);
+- decode is the O(1) recurrence step on a carried (conv_state, ssm_state)
+  cache — the reason the long_500k cell is runnable for SSM archs at all.
+
+Parameter shapes follow mamba-1: in_proj fused (x,z), depthwise causal
+conv (k=4), x_proj -> (dt_rank, B, C), dt_proj with softplus bias init,
+A_log initialized to log(1..d_state), D skip, out_proj.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.declare import DeclTree, ParamDecl
+from repro.parallel.sharding import lshard
+
+
+def mamba_decls(cfg: ModelConfig) -> DeclTree:
+    d, di, st, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    conv = cfg.ssm_conv
+
+    def a_log_init(key, shape, dtype):
+        # S4D-real init: A = -(1..d_state) per channel; shape-general so the
+        # stacked (layers, di, st) declaration initializes correctly too
+        a = jnp.broadcast_to(
+            jnp.arange(1, shape[-1] + 1, dtype=jnp.float32), shape
+        )
+        return jnp.log(a).astype(jnp.float32)  # kept f32 (sensitive)
+
+    return {
+        "in_proj": ParamDecl((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamDecl((conv, di), ("conv_kernel", "ssm_inner"),
+                            "fan_in", scale=1.0),
+        "conv_b": ParamDecl((di,), ("ssm_inner",), "zeros"),
+        "x_proj": ParamDecl((di, dtr + 2 * st), ("ssm_inner", None)),
+        "dt_proj": ParamDecl((dtr, di), ("dt_rank", "ssm_inner"),
+                             scale=dtr ** -0.5),
+        "dt_bias": ParamDecl(
+            (di,), ("ssm_inner",), "custom",
+            custom=lambda key, shape, dtype: _dt_bias_init(key, shape),
+            dtype="float32",
+        ),
+        "a_log": ParamDecl((di, st), ("ssm_inner", "ssm_state"), "custom",
+                           custom=a_log_init, dtype="float32"),
+        "d_skip": ParamDecl((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDecl((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _dt_bias_init(key, shape):
+    # dt in [1e-3, 1e-1] via inverse softplus (mamba reference init)
+    dt = jnp.exp(
+        jax.random.uniform(key, shape, jnp.float32)
+        * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)
+    )
+    return jnp.log(jnp.expm1(dt)).astype(jnp.float32)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq.  x: (B, L, di); w: (K, di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum of shifted slices: cheap, fusion-friendly for small K (=4)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_inputs(params: Dict, xc: jax.Array, cfg: ModelConfig):
+    """Shared by scan/decode: per-token (a, bx, C) from conv output xc."""
+    dtr, st = cfg.dt_rank, cfg.ssm_state
+    proj = jnp.einsum("...i,ij->...j", xc, params["x_proj"].astype(xc.dtype))
+    dt_raw, B, C = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dt_raw, params["dt_proj"].astype(xc.dtype))
+        .astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # (..., di) f32
+    a_mat = -jnp.exp(params["a_log"].astype(jnp.float32))  # (di, st)
+    a = jnp.exp(dt[..., None] * a_mat)                     # (..., di, st)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * B.astype(jnp.float32)[
+        ..., None, :
+    ]  # (..., di, st)
+    return a, bx, C.astype(jnp.float32)
+
+
+def _scan_chunk(h0, a, bx):
+    """Linear recurrence over one chunk via associative scan.
+    a, bx: (L, B, di, st); h0: (B, di, st)."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, bx), axis=0)
+    h = a_cum * h0[None] + b_cum
+    return h  # (L, B, di, st)
+
+
+def mamba_block(params: Dict, x: jax.Array, cfg: ModelConfig,
+                return_state: bool = False):
+    """Training/prefill forward.  x: (B, L, d) -> (B, L, d).
+
+    ``return_state=True`` additionally returns (conv_state, ssm_state) for
+    handing off to decode (prefill path) — computed in the SAME pass.
+    """
+    b, l, _ = x.shape
+    di = cfg.d_inner
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(x.dtype))
+    xs, z = jnp.split(xz, [di], axis=-1)
+    xs = lshard(xs, "batch", "seq", "ssm_inner")
+    xc = jax.nn.silu(
+        _causal_conv(xs, params["conv_w"].astype(x.dtype),
+                     params["conv_b"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+
+    chunk = min(cfg.ssm_chunk, l)
+    if return_state and l % chunk != 0:
+        chunk = l  # single chunk: padding would contaminate the carried state
+    l_pad = -(-l // chunk) * chunk  # causal: end-padding never leaks back
+    n_chunks = l_pad // chunk
+    if l_pad != l:
+        xc_p = jnp.pad(xc, ((0, 0), (0, l_pad - l), (0, 0)))
+    else:
+        xc_p = xc
+    # (n_chunks, chunk, B, di) for the outer scan
+    xcc = xc_p.reshape(b, n_chunks, chunk, di).transpose(1, 2, 0, 3)
+
+    # The selective-scan inputs (a, bx ~ (chunk, B, di, st)) and the
+    # y = h . C contraction both live INSIDE the chunk body: nothing of
+    # size d_state x L is ever materialized for the whole layer, and the
+    # backward recomputes per chunk (jax.checkpoint).  This is the TPU
+    # restatement of the Mamba CUDA kernel's SRAM-residency argument.
+    @jax.checkpoint
+    def chunk_body(h0, xc_chunk):
+        ac, bc, cc = _ssm_inputs(params, xc_chunk, cfg)
+        h = _scan_chunk(h0, ac, bc)            # (chunk, B, di, st)
+        yc = jnp.einsum("lbis,lbs->lbi", h, cc)
+        return h[-1], yc
+
+    h0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_body, h0, xcc)
+    # ys: (n_chunks, chunk, B, di) -> (B, L, di)
+    y = ys.transpose(2, 0, 1, 3).reshape(b, l_pad, di)[:, :l]
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :] * xc.astype(
+        jnp.float32
+    )
+    y = (y.astype(x.dtype)) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bli,id->bld", y, params["out_proj"].astype(x.dtype))
+    out = lshard(out, "batch", "seq_sp", "embed")
+    if return_state:
+        conv_state = xs[:, l - (cfg.ssm_conv - 1):, :]  # trailing K-1 inputs
+        return out, conv_state, h_last
+    return out
+
+
+def mamba_decode_step(
+    params: Dict,
+    x: jax.Array,             # (B, 1, d)
+    cfg: ModelConfig,
+    conv_state: jax.Array,    # (B, K-1, di) trailing conv inputs
+    ssm_state: jax.Array,     # (B, di, st) f32
+):
+    """O(1) single-token step; returns (y (B,1,d), conv_state, ssm_state)."""
+    di = cfg.d_inner
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(x.dtype))
+    xs, z = jnp.split(xz, [di], axis=-1)        # (B, 1, di)
+
+    # conv over [conv_state, xs]
+    w = params["conv_w"].astype(x.dtype)        # (K, di)
+    window = jnp.concatenate([conv_state, xs], axis=1)  # (B, K, di)
+    xc = jnp.einsum("bki,ki->bi", window, w) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)  # (B, di)
+    conv_state = window[:, 1:, :]
+
+    a, bx, C = _ssm_inputs(params, xc, cfg)     # (B, di, st), (B, st)
+    ssm_state = a * ssm_state + bx              # (B, di, st) f32
+    y = jnp.einsum("bis,bs->bi", ssm_state, C)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :] * xc.astype(
+        jnp.float32
+    )
+    y = y.astype(x.dtype) * jax.nn.silu(
+        z[:, 0].astype(jnp.float32)
+    ).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"].astype(x.dtype))
+    return out[:, None, :], conv_state, ssm_state

@@ -1,0 +1,100 @@
+"""AdamW with fp32 master weights for bf16 models.
+
+State layout (all pytrees mirroring params):
+- master: fp32 master copy (omitted when params are already fp32)
+- mu, nu: fp32 first/second moments
+- count: scalar step
+
+Sharding: moments and master inherit the *parameter's* PartitionSpec (the
+update is elementwise), so optimizer memory scales down with TP exactly like
+the parameters do — including the fan-in fallback cases (see
+parallel.resolve).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if any(p.dtype != jnp.float32 for p in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    state: Dict[str, Any],
+    lr_scale: jax.Array | float = 1.0,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    masters = state.get("master", params)
+
+    def upd(p_master, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        p_new = p_master - lr * (step + cfg.weight_decay * p_master)
+        return p_new, mu, nu
+
+    flat_m, treedef = jax.tree_util.tree_flatten(masters)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_mu = jax.tree_util.tree_flatten(state["mu"])[0]
+    flat_nu = jax.tree_util.tree_flatten(state["nu"])[0]
+    out = [upd(m, g, mu, nu)
+           for m, g, mu, nu in zip(flat_m, flat_g, flat_mu, flat_nu)]
+    new_master = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+
+    # cast back to the model dtype
+    new_params = jax.tree.map(
+        lambda m, p: m.astype(p.dtype), new_master, params
+    )
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    if "master" in state:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, metrics

@@ -1,0 +1,68 @@
+"""LR schedules, including MiniCPM's WSD (warmup-stable-decay).
+
+WSD (arXiv:2404.06395 §4): linear warmup to peak, long stable phase at peak,
+short exponential/linear decay tail — designed so checkpoints in the stable
+phase can branch to a decay at any time (pairs naturally with this repo's
+suspend/resume machinery: a preempted job resumed with fewer remaining steps
+re-derives its decay point from the schedule, not from wall clock).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(
+    total_steps: int,
+    *,
+    warmup_frac: float = 0.01,
+    decay_frac: float = 0.1,
+    final_scale: float = 0.1,
+) -> Callable:
+    warmup = max(1, int(total_steps * warmup_frac))
+    decay = max(1, int(total_steps * decay_frac))
+    stable_end = total_steps - decay
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(step / warmup, 1.0)
+        d = jnp.where(
+            step <= stable_end,
+            1.0,
+            1.0 - (1.0 - final_scale) * (step - stable_end) / decay,
+        )
+        return w * jnp.clip(d, final_scale, 1.0)
+
+    return fn
+
+
+def cosine_schedule(total_steps: int, *, warmup_frac: float = 0.01,
+                    final_scale: float = 0.1) -> Callable:
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(step / warmup, 1.0)
+        t = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+        c = final_scale + (1 - final_scale) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return w * c
+
+    return fn
+
+
+def constant_schedule(total_steps: int, **_) -> Callable:
+    del total_steps
+    return lambda step: jnp.float32(1.0)
+
+
+SCHEDULES = {
+    "wsd": wsd_schedule,
+    "cosine": cosine_schedule,
+    "constant": constant_schedule,
+}
+
+
+def make_schedule(name: str, total_steps: int, **kw) -> Callable:
+    return SCHEDULES[name](total_steps, **kw)

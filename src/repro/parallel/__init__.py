@@ -1,0 +1,15 @@
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_to_spec,
+    lshard,
+    logical_axis_rules,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "ShardingRules",
+    "logical_to_spec",
+    "lshard",
+    "logical_axis_rules",
+]

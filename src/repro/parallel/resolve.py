@@ -1,0 +1,156 @@
+"""Resolve parameter/cache shardings for a concrete (config, mesh) pair.
+
+Built on the declaration trees (models.declare): every leaf carries logical
+axes; this module turns them into PartitionSpecs with two refinements over
+the raw table lookup:
+
+1. **Shape-aware degradation** (spec_for_shape): published dims that don't
+   divide the mesh axis (36 heads, kv=2, 24 heads on 16-way TP) are
+   replicated instead of failing.
+
+2. **Fan-in fallback**: if an attention projection lost its "heads" sharding
+   to rule 1, the freed "model" axis is re-assigned to the tensor's "embed"
+   (fan-in/fan-out) dim when that divides.  This keeps the parameter + its
+   optimizer state sharded 16-way (a ZeRO-for-TP property) at the cost of a
+   replicated attention core — measured and attacked in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import (
+    ShardingRules,
+    _axes_size,
+    _filter_axes,
+    spec_for_shape,
+)
+
+_FALLBACK_TRIGGERS = ("heads", "kv_heads", "vocab", "ff", "expert",
+                      "ssm_inner")
+_FALLBACK_TARGET = "embed"
+
+
+def spec_for_decl(
+    rules: ShardingRules,
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+) -> P:
+    spec = spec_for_shape(rules, axes, mesh, shape)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+
+    # did a trigger dim lose its model sharding?
+    model_axes = _filter_axes(mesh, "model")
+    if model_axes is None:
+        return spec
+    lost = False
+    model_used = False
+    for ax, ent in zip(axes, entries):
+        wanted = rules.get(ax)
+        wants_model = wanted == "model" or (
+            isinstance(wanted, tuple) and "model" in wanted
+        )
+        has_model = ent == "model" or (
+            isinstance(ent, tuple) and "model" in ent
+        )
+        if has_model:
+            model_used = True
+        if ax in _FALLBACK_TRIGGERS and wants_model and not has_model:
+            lost = True
+    if not lost or model_used:
+        return spec
+
+    # re-assign 'model' to the embed (fan) dim if it divides
+    for i, (ax, ent, dim) in enumerate(zip(axes, entries, shape)):
+        if ax == _FALLBACK_TARGET and ent is None and \
+                dim % _axes_size(mesh, "model") == 0:
+            entries[i] = "model"
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: add the data axes to the first shardable replicated dim.
+
+    Optimizer state (fp32 master + moments) is elementwise in the update,
+    so it can shard over (pod, data) on top of TP — GSPMD turns the grad
+    flow into reduce-scatter(grads) -> sharded update -> all-gather(params),
+    the standard ZeRO-1 schedule.  Cuts per-chip optimizer bytes by the DP
+    degree (16-32x); measured in EXPERIMENTS.md §Perf iteration Z.
+    """
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not daxes:
+        return spec
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    if any(a in ("pod", "data") or
+           (isinstance(a, tuple) and any(x in ("pod", "data") for x in a))
+           for a in entries if a):
+        return spec
+    for i, (ent, dim) in enumerate(zip(entries, shape)):
+        if ent is None and dim % dsize == 0:
+            entries[i] = daxes if len(daxes) > 1 else daxes[0]
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_specs(axes_tree: Any, abstract_tree: Any, mesh: Mesh,
+               rules: ShardingRules) -> Any:
+    """Map (axes tree, ShapeDtypeStruct tree) -> PartitionSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda ax, ab: spec_for_decl(rules, tuple(ax), tuple(ab.shape), mesh),
+        axes_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )
+
+
+def tree_shardings(axes_tree: Any, abstract_tree: Any, mesh: Mesh,
+                   rules: ShardingRules) -> Any:
+    specs = tree_specs(axes_tree, abstract_tree, mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def train_state_shardings(state_axes: Any, state_abs: Any, mesh: Mesh,
+                          rules: ShardingRules, zero1: bool = True,
+                          zero3: bool = False) -> Any:
+    """Shardings for a TrainState: params per rules; optimizer state with
+    ZeRO-1 (data-axes) sharding layered on top; zero3 additionally shards
+    the parameters themselves over the data axes (per-layer all-gather)."""
+    import dataclasses as _dc  # noqa: PLC0415
+
+    base = tree_shardings(state_axes, state_abs, mesh, rules)
+    if not zero1 and not zero3:
+        return base
+
+    def z1(sh, ab):
+        spec = zero1_spec(sh.spec, tuple(ab.shape), mesh)
+        return NamedSharding(mesh, spec)
+
+    opt = dict(base.opt)
+    if zero1 or zero3:
+        for key in ("mu", "nu", "master"):
+            if key in opt:
+                opt[key] = jax.tree_util.tree_map(
+                    z1, opt[key], state_abs.opt[key]
+                )
+    params = base.params
+    if zero3:
+        params = jax.tree_util.tree_map(z1, base.params, state_abs.params)
+    return _dc.replace(base, opt=opt, params=params)

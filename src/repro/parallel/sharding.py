@@ -1,0 +1,199 @@
+"""Logical-axis sharding rules: one table drives DP/TP/EP/SP.
+
+Every parameter and activation in the model layer is annotated with *logical*
+axis names ("batch", "heads", "ff", "expert", ...).  This module maps logical
+axes to physical mesh axes, so the same model code runs on the single-pod
+(16, 16) ``(data, model)`` mesh, the multi-pod (2, 16, 16)
+``(pod, data, model)`` mesh, a tiny test mesh, or one device — only the rules
+change.  This is also what makes elastic restart trivial: checkpoints store
+logical arrays; shardings are re-derived from the rules on the new mesh
+(checkpoint/elastic.py).
+
+Parallelism styles expressed purely through the table:
+- DP: "batch" -> ("pod", "data")
+- TP: "heads"/"ff"/"vocab"/"ssm_inner" -> "model"
+- EP: "expert" -> "model"
+- SP: "seq_shard" -> "data" (long-context decode: KV/state sharded over seq)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axes (or None = replicated)."""
+
+    table: Tuple[Tuple[str, MeshAxes], ...]
+
+    def get(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        for k, v in self.table:
+            if k == logical:
+                return v
+        return None
+
+    def override(self, **kw: MeshAxes) -> "ShardingRules":
+        table = tuple((k, kw.pop(k, v)) for k, v in self.table)
+        table += tuple(kw.items())
+        return ShardingRules(table)
+
+
+DEFAULT_RULES = ShardingRules(
+    table=(
+        # activations
+        ("batch", ("pod", "data")),
+        ("seq", None),              # sequence replicated by default
+        ("seq_kv", None),           # KV-cache seq dim (SP override -> "data")
+        ("seq_shard", "data"),      # SP: long-context KV/state sharding
+        ("embed", None),            # residual stream replicated
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("head_dim", None),
+        ("ff", "model"),
+        ("vocab", "model"),
+        ("expert", "model"),
+        ("expert_capacity", None),
+        ("ssm_inner", "model"),
+        ("ssm_state", None),
+        ("conv_kernel", None),
+        ("dt_rank", None),
+        ("layers", None),           # stacked scan groups
+        # clustering (the paper's side of the house)
+        ("points", ("pod", "data")),
+        ("centroids", "model"),
+        ("features", None),
+    )
+)
+
+
+def _filter_axes(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on 1 pod)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    return present if present else None
+
+
+def logical_to_spec(
+    rules: ShardingRules, logical_axes: Tuple[Optional[str], ...],
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    spec = []
+    for ax in logical_axes:
+        m = rules.get(ax)
+        if mesh is not None:
+            m = _filter_axes(mesh, m)
+        spec.append(m)
+    # drop trailing Nones (canonical form)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def named_sharding(
+    mesh: Mesh, rules: ShardingRules, logical_axes: Tuple[Optional[str], ...]
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(rules, logical_axes, mesh))
+
+
+# -- in-model constraints ----------------------------------------------------------
+
+_ACTIVE_RULES: list = [DEFAULT_RULES]
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: ShardingRules):
+    _ACTIVE_RULES.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE_RULES.pop()
+
+
+def current_rules() -> ShardingRules:
+    return _ACTIVE_RULES[-1]
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src.mesh import thread_resources  # noqa: PLC0415
+
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def _axes_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for_shape(
+    rules: ShardingRules,
+    logical_axes: Tuple[Optional[str], ...],
+    mesh: Mesh,
+    shape: Tuple[int, ...],
+) -> P:
+    """Shape-aware spec: drops mesh axes that do not divide the dim evenly.
+
+    GSPMD requires even divisibility at jit boundaries; published configs
+    include odd sizes (36 heads, vocab 92553 pre-padding, kv=2), so sharding
+    degrades per-tensor instead of failing: a non-divisible dim is
+    replicated (and parallel.resolve may re-assign the freed mesh axis to a
+    fan-in dim — see resolve_param_specs).
+    """
+    spec = []
+    used: set = set()
+    for ax, dim in zip(logical_axes, shape):
+        m = _filter_axes(mesh, rules.get(ax))
+        if isinstance(m, str):
+            m = (m,)
+        if m is not None:
+            m = tuple(a for a in m if a not in used)
+            # greedy prefix that divides the dim
+            while m and dim % _axes_size(mesh, m) != 0:
+                m = m[:-1]
+            m = m or None
+        if m is not None:
+            used.update(m)
+            spec.append(m if len(m) > 1 else m[0])
+        else:
+            spec.append(None)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def lshard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain an activation to its logical sharding (no-op without mesh).
+
+    The no-op path keeps all model code runnable on one CPU device (smoke
+    tests) while the dry-run gets full GSPMD constraints.  Shape-aware: axes
+    that don't divide are left unconstrained rather than failing.
+    """
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    rules = current_rules()
+    spec = spec_for_shape(rules, tuple(logical_axes), mesh, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

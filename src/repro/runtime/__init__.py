@@ -1,0 +1,18 @@
+"""Runtime substrate: the TPU-side analogue of the paper's OpenCL wrapper library.
+
+The paper's wrapper discovers and loads the vendor OpenCL library lazily at
+runtime, guards its load state with a writer-preferred reentrant RW lock, and
+lets long-running GPU jobs be aborted cooperatively between kernel launches.
+
+Here the same responsibilities map to:
+
+- :mod:`repro.runtime.backend`   -- lazy device/capability discovery
+- :mod:`repro.runtime.locks`     -- the RW lock (direct port)
+- :mod:`repro.runtime.preemption`-- SIGTERM -> checkpoint-and-exit, hold-alive
+- :mod:`repro.runtime.watchdog`  -- step-time straggler watchdog
+"""
+
+from repro.runtime.locks import RWLock
+from repro.runtime.backend import Backend, discover_backend
+
+__all__ = ["RWLock", "Backend", "discover_backend"]

@@ -1,0 +1,158 @@
+"""Lazy backend discovery — the "wrapper library" layer.
+
+The paper's wrapper library `dlopen`s the vendor OpenCL `.so` at runtime,
+resolves symbols lazily immediately before first use, returns an error code
+when called before load, and can be unloaded/reloaded.  The JAX analogue of
+"do not link the accelerator at compile time" is: **never touch jax device
+state at import time**.  This module keeps all device queries behind an
+explicit :func:`load` / :func:`discover_backend` call guarded by the same
+writer-preferred RW lock the paper uses for its load-state flag.
+
+Why this matters here concretely: ``launch/dryrun.py`` must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* the first
+jax device query process-wide.  Any module that calls ``jax.devices()`` at
+import time would lock the device count at 1 and silently break the
+multi-pod dry-run — the exact class of bug the paper's lazy-loading design
+exists to prevent (calling an OpenCL symbol before the library is loaded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, List, Optional
+
+from repro.runtime.locks import RWLock
+
+
+class BackendNotLoadedError(RuntimeError):
+    """Raised when a backend query is made before :func:`load`.
+
+    Mirrors the paper: "If an OpenCL method of the wrapper library is called
+    before the shared library has been loaded [...] an error is returned."
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Peak-rate card for one accelerator chip (roofline constants)."""
+
+    name: str
+    peak_bf16_flops: float  # FLOP/s
+    hbm_bandwidth: float    # byte/s
+    ici_link_bandwidth: float  # byte/s per link
+    hbm_bytes: int
+    vmem_bytes: int
+
+
+# TPU v5e: the compile target for every kernel and dry-run in this repo.
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+# The host we actually run on (correctness/interpret mode only).
+HOST_CPU = ChipSpec(
+    name="host_cpu",
+    peak_bf16_flops=1e11,
+    hbm_bandwidth=1e10,
+    ici_link_bandwidth=1e9,
+    hbm_bytes=32 * 1024**3,
+    vmem_bytes=32 * 1024**2,
+)
+
+
+@dataclasses.dataclass
+class Backend:
+    """A loaded accelerator backend."""
+
+    platform: str
+    device_count: int
+    devices: List[Any]
+    chip: ChipSpec
+
+    @property
+    def is_tpu(self) -> bool:
+        return self.platform == "tpu"
+
+
+class _BackendRegistry:
+    """Process-wide backend state behind the paper's RW lock discipline."""
+
+    def __init__(self) -> None:
+        self._lock = RWLock()
+        self._backend: Optional[Backend] = None
+        self._load_count = 0  # diagnostics: how many load/unload cycles
+
+    def load(self) -> Backend:
+        """Discover devices now (first jax device query happens here)."""
+        with self._lock.write():
+            if self._backend is None:
+                import jax  # local import: keep module import side-effect free
+
+                devices = jax.devices()
+                platform = devices[0].platform
+                chip = TPU_V5E if platform == "tpu" else HOST_CPU
+                self._backend = Backend(
+                    platform=platform,
+                    device_count=len(devices),
+                    devices=list(devices),
+                    chip=chip,
+                )
+                self._load_count += 1
+            return self._backend
+
+    def unload(self) -> None:
+        """Forget the backend (paper: library can be unloaded at runtime).
+
+        jax itself keeps its client alive; this resets *our* view so tests can
+        exercise the call-before-load error path.
+        """
+        with self._lock.write():
+            self._backend = None
+
+    def get(self) -> Backend:
+        with self._lock.read():
+            if self._backend is None:
+                raise BackendNotLoadedError(
+                    "backend not loaded; call repro.runtime.backend.load() first"
+                )
+            return self._backend
+
+    @property
+    def loaded(self) -> bool:
+        with self._lock.read():
+            return self._backend is not None
+
+    @property
+    def load_count(self) -> int:
+        with self._lock.read():
+            return self._load_count
+
+
+_REGISTRY = _BackendRegistry()
+
+
+def load() -> Backend:
+    return _REGISTRY.load()
+
+
+def unload() -> None:
+    _REGISTRY.unload()
+
+
+def get_backend() -> Backend:
+    return _REGISTRY.get()
+
+
+def discover_backend() -> Backend:
+    """Load-if-needed and return the backend (the common entry point)."""
+    return _REGISTRY.load()
+
+
+def is_loaded() -> bool:
+    return _REGISTRY.loaded

@@ -1,0 +1,17 @@
+from repro.train.step import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    make_prefill_step,
+    make_serve_step,
+    loss_fn,
+)
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "loss_fn",
+]

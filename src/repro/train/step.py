@@ -1,0 +1,222 @@
+"""Train / prefill / serve steps for every architecture.
+
+These are the functions the dry-run lowers and the launcher drives.  All
+three are pure (state in, state out): the cancellation/checkpoint machinery
+wraps them at the host level, never reaches inside — the paper's
+"flag tested between kernel executions" contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.frontends import prefix_embed_shape
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.sharding import lshard
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("params", "opt", "step", "rng"),
+    meta_fields=(),
+)
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Dict[str, Any]
+    step: jax.Array
+    rng: jax.Array
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig) -> TrainState:
+    kp, kr = jax.random.split(key)
+    params = lm.init_params(kp, cfg)
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        step=jnp.zeros((), jnp.int32),
+        rng=kr,
+    )
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    params = lm.abstract_params(cfg)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt = {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.dtype == "bfloat16":
+        opt["master"] = jax.tree.map(f32, params)
+    return TrainState(
+        params=params,
+        opt=opt,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+def train_state_axes(cfg: ModelConfig) -> TrainState:
+    """Logical axes tree matching TrainState (for sharding resolution)."""
+    axes = lm.param_axes(cfg)
+    opt = {"mu": axes, "nu": axes, "count": ()}
+    if cfg.dtype == "bfloat16":
+        opt["master"] = axes
+    return TrainState(params=axes, opt=opt, step=(), rng=(None,))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def _ce_terms(logits: jax.Array, labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(masked negative-log-likelihood sum, mask count) for one chunk.
+
+    Sharded-vocab CE: logsumexp and the label contraction are plain
+    reductions over the sharded axis (partial + all-reduce under GSPMD).
+    take_along_axis/gather here would force a full-vocab all-gather of the
+    logits (~13 GB/device at train_4k) — measured in EXPERIMENTS.md §Perf.
+    """
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    label_mask = vocab_iota[None, None, :] == labels[..., None]
+    label_logit = jnp.sum(jnp.where(label_mask, logits, 0.0), axis=-1)
+    ll = label_logit - lse
+    # final position predicts wrapped token (synthetic data) — keep it masked
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    return -jnp.sum(ll * mask), jnp.sum(mask)
+
+
+def loss_fn(
+    params: Any,
+    tokens: jax.Array,        # (B, S_text)
+    labels: jax.Array,        # (B, S_text) next-token targets
+    cfg: ModelConfig,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x, aux = lm.hidden_forward(params, tokens, cfg, prefix_embeds)
+    x = x[:, -tokens.shape[1]:, :]  # prefix positions carry no labels
+    b, s, d = x.shape
+
+    nc = cfg.loss_chunk
+    if nc and b % nc == 0 and b >= nc and nc > 1:
+        # Chunked CE: the (B, S, vocab) f32 logits are never materialized;
+        # each batch sub-chunk recomputes its logits in the backward pass.
+        # Chunks are STRIDED (row = nc*j + i) so every chunk touches every
+        # DP shard — a contiguous split would serialize onto single hosts.
+        bc = b // nc
+        xr = x.reshape(bc, nc, s, d).transpose(1, 0, 2, 3)
+        lr = labels.reshape(bc, nc, s).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk(carry, inp):
+            xc, lc = inp
+            logits = lm.unembed(params, xc, cfg)
+            nll, cnt = _ce_terms(logits, lc)
+            return (carry[0] + nll, carry[1] + cnt), None
+
+        (nll, cnt), _ = jax.lax.scan(
+            chunk, (jnp.float32(0.0), jnp.float32(0.0)), (xr, lr)
+        )
+    else:
+        logits = lm.unembed(params, x, cfg)
+        nll, cnt = _ce_terms(logits, labels)
+
+    ce = nll / jnp.maximum(cnt, 1.0)
+    total = ce + cfg.router_aux_weight * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    schedule=None):
+    """(state, batch) -> (state, metrics).  batch: dict of arrays."""
+    schedule = schedule or (lambda s: 1.0)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (loss, parts), grads = grad_fn(
+            state.params, batch["tokens"], batch["labels"], cfg,
+            batch.get("prefix_embeds"),
+        )
+        lr_scale = schedule(state.step)
+        params, opt, metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt, lr_scale
+        )
+        new_state = TrainState(
+            params=params,
+            opt=opt,
+            step=state.step + 1,
+            rng=jax.random.fold_in(state.rng, 0),
+        )
+        metrics = dict(metrics, loss=loss, **parts)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: Optional[int] = None):
+    """(params, batch) -> (last-token logits, decode cache)."""
+
+    def prefill(params, batch: Dict[str, jax.Array]):
+        return lm.prefill_step(
+            params, batch["tokens"], cfg, max_seq=max_seq,
+            prefix_embeds=batch.get("prefix_embeds"),
+        )
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, cache, tokens (B,1), pos ()) -> (logits, cache)."""
+
+    def serve(params, cache, tokens, pos):
+        return lm.decode_step(params, cache, tokens, pos, cfg)
+
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# Batch abstractions (shared by dry-run and drivers)
+# ---------------------------------------------------------------------------
+
+
+def train_batch_shapes(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStructs for one training batch (stub frontend included)."""
+    s_text = seq - cfg.prefix_len
+    shapes = {
+        "tokens": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+    }
+    pe = prefix_embed_shape(cfg, batch)
+    if pe is not None:
+        shapes["prefix_embeds"] = jax.ShapeDtypeStruct(pe, jnp.bfloat16)
+    return shapes
+
+
+def make_train_batch(key: jax.Array, cfg: ModelConfig, batch: int, seq: int):
+    """Concrete synthetic batch matching train_batch_shapes."""
+    from repro.data.tokens import synthetic_token_batch
+    from repro.models.frontends import synthetic_prefix
+
+    s_text = seq - cfg.prefix_len
+    tb = synthetic_token_batch(key, batch=batch, seq=s_text, vocab=cfg.vocab)
+    out = {"tokens": tb.tokens, "labels": tb.labels}
+    pe = synthetic_prefix(jax.random.fold_in(key, 1), cfg, batch)
+    if pe is not None:
+        out["prefix_embeds"] = pe
+    return out

@@ -1,0 +1,241 @@
+"""Job store (WorkManager analogue), checkpointing, preemption, watchdog."""
+
+import os
+import signal
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    CheckpointCorrupt,
+    CheckpointStore,
+)
+from repro.core.cancellation import CancellationToken, CancelReason
+from repro.core.jobs import JobState, JobStore
+from repro.runtime.preemption import HoldAlive, PreemptionGuard
+from repro.runtime.watchdog import StepWatchdog
+
+
+# -- job store -----------------------------------------------------------------
+
+
+def test_job_lifecycle(tmp_path):
+    store = JobStore(str(tmp_path / "jobs.db"))
+    jid = store.enqueue("kmeans", {"k": 4})
+    job = store.get(jid)
+    assert job.state == JobState.ENQUEUED and job.params == {"k": 4}
+
+    claimed = store.claim_next()
+    assert claimed.job_id == jid and claimed.state == JobState.RUNNING
+    assert store.claim_next() is None  # nothing else to claim
+
+    store.report_progress(jid, step=10, checkpoint_path="/ckpt/step_10",
+                          inertia=1.5)
+    job = store.get(jid)
+    assert job.step == 10 and job.progress["inertia"] == 1.5
+    assert job.checkpoint_path == "/ckpt/step_10"
+
+    store.transition(jid, JobState.SUCCEEDED)
+    assert store.get(jid).state.terminal
+
+
+def test_job_recovery_of_stale_running(tmp_path):
+    """A RUNNING job with a dead owner is swept to SUSPENDED on reattach."""
+    store = JobStore(str(tmp_path / "jobs.db"), heartbeat_timeout=0.05)
+    jid = store.enqueue("train", {})
+    store.claim_next()
+    time.sleep(0.1)  # heartbeat goes stale
+    orphans = store.recover_orphans()
+    assert orphans == [jid]
+    job = store.get(jid)
+    assert job.state == JobState.SUSPENDED
+    # suspended jobs are claimable again (resume path)
+    again = store.claim_next()
+    assert again.job_id == jid
+
+
+def test_job_survives_reopen(tmp_path):
+    """Durability: the store is the source of truth across 'reboots'."""
+    path = str(tmp_path / "jobs.db")
+    store = JobStore(path)
+    jid = store.enqueue("mine", {"algo": "dbscan"})
+    store.close()
+    store2 = JobStore(path)
+    job = store2.get(jid)
+    assert job is not None and job.kind == "mine"
+
+
+def test_jobstore_thread_safety(tmp_path):
+    store = JobStore(str(tmp_path / "jobs.db"))
+    jid = store.enqueue("x", {})
+    errs = []
+
+    def beat():
+        try:
+            for _ in range(50):
+                store.report_progress(jid, loss=1.0)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=beat) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+
+
+# -- checkpoint store ------------------------------------------------------------
+
+
+def _tree(step):
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4) * step,
+                   "b": jnp.ones((4,)) * step},
+        "opt": {"mu": jnp.zeros((3, 4)), "step": jnp.int32(step)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path / "ckpt"))
+    store.save(5, _tree(5), metadata={"arch": "olmo-1b"})
+    assert store.latest_step() == 5
+    restored = store.restore(5, jax.tree.map(np.zeros_like, _tree(0)))
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(_tree(5))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert store.manifest(5)["metadata"]["arch"] == "olmo-1b"
+
+
+def test_checkpoint_gc_keeps_last(tmp_path):
+    store = CheckpointStore(str(tmp_path / "ckpt"), keep_last=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, _tree(s))
+    assert store.steps() == [3, 4]
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    store = CheckpointStore(str(tmp_path / "ckpt"))
+    path = store.save(1, _tree(1))
+    victim = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    with open(os.path.join(path, victim), "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        f.write(b"\x42")
+    with pytest.raises(CheckpointCorrupt):
+        store.restore(1, _tree(0))
+
+
+def test_checkpoint_no_partial_commit(tmp_path):
+    """Tmp dirs never surface as checkpoints."""
+    root = str(tmp_path / "ckpt")
+    store = CheckpointStore(root)
+    os.makedirs(os.path.join(root, "tmp.9.deadbeef"))
+    assert store.steps() == []
+    assert store.latest_step() is None
+
+
+def test_async_checkpointer_in_order(tmp_path):
+    store = CheckpointStore(str(tmp_path / "ckpt"), keep_last=10)
+    acp = AsyncCheckpointer(store)
+    for s in range(1, 6):
+        acp.submit(s, _tree(s))
+    acp.wait()
+    assert store.steps() == [1, 2, 3, 4, 5]
+    r = store.restore(3, _tree(0))
+    np.testing.assert_allclose(np.asarray(r["params"]["w"]),
+                               np.arange(12.0).reshape(3, 4) * 3)
+
+
+def test_async_checkpointer_snapshot_semantics(tmp_path):
+    """Mutating (donating) the array after submit must not corrupt the save."""
+    store = CheckpointStore(str(tmp_path / "ckpt"))
+    acp = AsyncCheckpointer(store)
+    arr = np.ones((128,), np.float32)
+    tree = {"w": jnp.asarray(arr)}
+    acp.submit(1, tree)
+    tree["w"] = tree["w"] * 0  # simulate donation/overwrite
+    acp.wait()
+    r = store.restore(1, {"w": np.zeros((128,), np.float32)})
+    np.testing.assert_array_equal(np.asarray(r["w"]), arr)
+
+
+# -- preemption + watchdog -------------------------------------------------------
+
+
+def test_preemption_guard_sets_token():
+    token = CancellationToken()
+    with PreemptionGuard(token):
+        signal.raise_signal(signal.SIGTERM)
+        # handler runs synchronously in the main thread
+        assert token.cancelled()
+        assert token.reason == CancelReason.PREEMPTION
+
+
+def test_preemption_checkpoint_and_suspend(tmp_path):
+    """The full preemption path: signal -> cancel -> emergency save -> SUSPENDED."""
+    from repro.checkpoint.elastic import emergency_save
+
+    token = CancellationToken()
+    jobs = JobStore(str(tmp_path / "jobs.db"))
+    ckpt = CheckpointStore(str(tmp_path / "ckpt"))
+    jid = jobs.enqueue("train", {})
+    jobs.claim_next()
+
+    state = _tree(7)
+    with PreemptionGuard(token):
+        signal.raise_signal(signal.SIGTERM)
+        if token.cancelled():
+            path = emergency_save(ckpt, 7, state, token.reason.value)
+            jobs.report_progress(jid, step=7, checkpoint_path=path)
+            jobs.transition(jid, JobState.SUSPENDED)
+    job = jobs.get(jid)
+    assert job.state == JobState.SUSPENDED
+    assert ckpt.latest_step() == 7
+    assert ckpt.manifest(7)["metadata"]["reason"] == "preemption"
+    # resume path: claim again, restore, continue
+    resumed = jobs.claim_next()
+    assert resumed.job_id == jid
+    restored = ckpt.restore(7, jax.tree.map(np.zeros_like, _tree(0)))
+    np.testing.assert_allclose(np.asarray(restored["opt"]["step"]), 7)
+
+
+def test_hold_alive_heartbeats(tmp_path):
+    store = JobStore(str(tmp_path / "jobs.db"))
+    jid = store.enqueue("x", {})
+    store.claim_next()
+    hb0 = store.get(jid).heartbeat
+    with HoldAlive(store, jid, interval=0.02):
+        time.sleep(0.1)
+    assert store.get(jid).heartbeat > hb0
+
+
+def test_watchdog_fires_on_straggler():
+    events = []
+    wd = StepWatchdog(lambda el, med: events.append((el, med)), factor=3.0,
+                      min_samples=3, poll_interval=0.005)
+    with wd:
+        for _ in range(5):  # establish ~10ms median
+            wd.step_begin()
+            time.sleep(0.01)
+            wd.step_end()
+        wd.step_begin()
+        time.sleep(0.12)  # straggler step: > 3x median
+        wd.step_end()
+    assert wd.straggler_events >= 1
+    assert events and events[0][0] > events[0][1]
+
+
+def test_watchdog_quiet_on_normal_steps():
+    events = []
+    wd = StepWatchdog(lambda el, med: events.append(1), factor=5.0,
+                      min_samples=3, poll_interval=0.005)
+    with wd:
+        for _ in range(8):
+            wd.step_begin()
+            time.sleep(0.01)
+            wd.step_end()
+    assert not events

@@ -1,0 +1,153 @@
+"""Per-kernel validation vs pure-jnp oracles (interpret mode on CPU).
+
+Shape/dtype sweeps + hypothesis property tests, as per the brief.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.kernels.distance.ops import assign_clusters
+from repro.kernels.distance.ref import assign_clusters_ref
+from repro.kernels.neighbor.ops import epsilon_degree, expand_frontier
+from repro.kernels.neighbor.ref import (
+    epsilon_degree_ref,
+    expand_frontier_ref,
+)
+
+_HYPO = dict(
+    deadline=None,
+    max_examples=12,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+# -- K-Means assignment kernel -------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,k,d",
+    [
+        (128, 2, 1),      # paper's smallest grid corner
+        (1000, 6, 2),     # paper's figure example
+        (2048, 8, 4),     # paper's largest feature count
+        (513, 3, 2),      # non-divisible n
+        (256, 130, 2),    # k > one centroid tile
+        (64, 5, 300),     # d > two lane tiles (embedding-clustering regime)
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_assign_matches_ref(n, k, d, dtype):
+    kx, kc = jax.random.split(jax.random.PRNGKey(n * 7 + k * 3 + d))
+    x = (jax.random.normal(kx, (n, d), jnp.float32) * 5).astype(dtype)
+    c = (jax.random.normal(kc, (k, d), jnp.float32) * 5).astype(dtype)
+    idx, dist = assign_clusters(x, c)
+    ridx, rdist = assign_clusters_ref(x, c)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    # ties under low precision may legitimately differ; require the kernel's
+    # choice to be no worse than the oracle's distance
+    np.testing.assert_allclose(dist, rdist, rtol=tol, atol=tol)
+    if dtype == jnp.float32:
+        agree = np.mean(np.asarray(idx) == np.asarray(ridx))
+        assert agree == 1.0, f"assignment mismatch rate {1 - agree}"
+
+
+def test_assign_block_shapes_sweep():
+    """BlockSpec sweep: same answer for every legal tiling."""
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (512, 4), jnp.float32)
+    c = jax.random.normal(kc, (16, 4), jnp.float32)
+    ridx, rdist = assign_clusters_ref(x, c)
+    for bn in (64, 128, 512):
+        for bk in (8, 16):
+            idx, dist = assign_clusters(x, c, block_n=bn, block_k=bk)
+            assert (np.asarray(idx) == np.asarray(ridx)).all(), (bn, bk)
+            np.testing.assert_allclose(dist, rdist, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    n=st.integers(8, 300),
+    k=st.integers(1, 40),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**_HYPO)
+def test_assign_property(n, k, d, seed):
+    """Property: kernel min-distance equals oracle min-distance, and the
+    chosen centroid's true distance equals that min (validity of argmin)."""
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, d), jnp.float32) * 3
+    c = jax.random.normal(kc, (k, d), jnp.float32) * 3
+    idx, dist = assign_clusters(x, c)
+    _, rdist = assign_clusters_ref(x, c)
+    np.testing.assert_allclose(dist, rdist, rtol=3e-4, atol=3e-4)
+    chosen = np.asarray(c)[np.asarray(idx)]
+    true_d = np.sum((np.asarray(x) - chosen) ** 2, axis=1)
+    np.testing.assert_allclose(true_d, np.asarray(rdist), rtol=3e-4, atol=3e-4)
+    assert np.asarray(idx).min() >= 0 and np.asarray(idx).max() < k
+
+
+# -- DBSCAN neighborhood kernels -------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,d,eps",
+    [
+        (256, 1, 1.0),
+        (600, 2, 1.4142135),   # paper: eps = sqrt(features)
+        (1025, 4, 2.0),
+        (129, 2, 0.5),
+    ],
+)
+def test_degree_matches_ref(n, d, eps):
+    x = jax.random.normal(jax.random.PRNGKey(n + d), (n, d), jnp.float32) * 3
+    deg = epsilon_degree(x, eps)
+    rdeg = epsilon_degree_ref(x, eps)
+    assert (np.asarray(deg) == np.asarray(rdeg)).all()
+
+
+@pytest.mark.parametrize("n,d", [(256, 2), (600, 4), (1025, 1)])
+def test_expand_matches_ref(n, d):
+    kx, kf = jax.random.split(jax.random.PRNGKey(n * 31 + d))
+    x = jax.random.normal(kx, (n, d), jnp.float32) * 3
+    f = jax.random.bernoulli(kf, 0.05, (n,))
+    eps = float(np.sqrt(d))
+    r = expand_frontier(x, f, eps)
+    rr = expand_frontier_ref(x, f, eps)
+    assert (np.asarray(r) == np.asarray(rr)).all()
+
+
+def test_expand_empty_frontier():
+    x = jax.random.normal(jax.random.PRNGKey(3), (128, 2), jnp.float32)
+    f = jnp.zeros((128,), bool)
+    assert not bool(expand_frontier(x, f, 1.0).any())
+
+
+def test_degree_includes_self():
+    # isolated far-apart points: degree exactly 1 (self)
+    x = jnp.arange(64, dtype=jnp.float32)[:, None] * 100.0
+    deg = epsilon_degree(x, 1.0)
+    assert (np.asarray(deg) == 1).all()
+
+
+@given(
+    n=st.integers(8, 200),
+    d=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    eps=st.floats(0.2, 3.0),
+)
+@settings(**_HYPO)
+def test_neighbor_properties(n, d, seed, eps):
+    """Properties: symmetry of reachability, degree bounds, monotonicity in
+    eps, and frontier-expansion superset-of-frontier when frontier nonempty."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d), jnp.float32) * 2
+    deg1 = np.asarray(epsilon_degree(x, eps))
+    deg2 = np.asarray(epsilon_degree(x, eps * 1.5))
+    assert (deg1 >= 1).all() and (deg1 <= n).all()
+    assert (deg2 >= deg1).all()  # monotone in eps
+    f = jnp.zeros((n,), bool).at[seed % n].set(True)
+    r = np.asarray(expand_frontier(x, f, eps))
+    assert r[seed % n]  # self-distance 0 <= eps: frontier is reachable
+    assert r.sum() == deg1[seed % n]  # reach of a single point == its degree

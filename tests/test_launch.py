@@ -1,0 +1,111 @@
+"""End-to-end launcher tests: train/resume lifecycle, serve, mine, elastic
+restore.  These exercise the full paper contract on CPU smoke configs."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.elastic import restore_resharded
+from repro.checkpoint.store import CheckpointStore
+from repro.core.cancellation import CancellationToken, CancelReason
+from repro.core.jobs import JobState, JobStore
+from repro.launch.mine import run_mining_job
+from repro.launch.train import run_training_job
+
+
+@pytest.mark.slow
+def test_train_job_completes(tmp_path):
+    out = run_training_job(
+        arch="olmo-1b", smoke=True, steps=6, batch=2, seq=32,
+        workdir=str(tmp_path), ckpt_every=3,
+    )
+    assert out["final_state"] == "SUCCEEDED"
+    assert out["steps_done"] == 6
+    assert all(np.isfinite(v) for v in out["losses"])
+    store = CheckpointStore(str(tmp_path / "ckpt"))
+    assert store.latest_step() == 6
+
+
+@pytest.mark.slow
+def test_train_preempt_then_resume(tmp_path):
+    """The paper's core lifecycle: suspend mid-run, resume to completion."""
+    token = CancellationToken()
+    steps_seen = []
+
+    # cancel after the 3rd step via the progress side-channel
+    class _Token(CancellationToken):
+        pass
+
+    tok = CancellationToken()
+
+    def boom(*_):
+        tok.cancel(CancelReason.PREEMPTION)
+
+    import threading
+    timer = threading.Timer(6.0, boom)
+    timer.start()
+    out1 = run_training_job(
+        arch="olmo-1b", smoke=True, steps=60, batch=2, seq=32,
+        workdir=str(tmp_path), ckpt_every=2, token=tok,
+    )
+    timer.cancel()
+    # either it was fast enough to finish (unlikely on this host) or suspended
+    if out1["final_state"] == "SUSPENDED":
+        assert 0 < out1["steps_done"] < 60
+        jobs = JobStore(str(tmp_path / "jobs.db"))
+        sus = jobs.list_jobs(JobState.SUSPENDED)
+        assert len(sus) == 1
+        out2 = run_training_job(
+            arch="olmo-1b", smoke=True, steps=60, batch=2, seq=32,
+            workdir=str(tmp_path), ckpt_every=20,
+        )
+        assert out2["final_state"] == "SUCCEEDED"
+        assert out2["steps_done"] == 60
+
+
+@pytest.mark.slow
+def test_mine_job_and_cancel(tmp_path):
+    out = run_mining_job(algo="kmeans", features=2, clusters=4, size=128,
+                         workdir=str(tmp_path))
+    assert out["final_state"] == "SUCCEEDED"
+    assert out["converged"] in (True, False)
+
+    tok = CancellationToken()
+    tok.cancel()
+    out = run_mining_job(algo="dbscan", features=2, clusters=4, size=128,
+                         workdir=str(tmp_path), token=tok)
+    assert out["final_state"] == "SUSPENDED"
+    assert out["cancelled"]
+
+
+def test_elastic_restore_roundtrip(tmp_path):
+    """Save on the host mesh, restore with a sharding_fn (mesh-independent)."""
+    from repro.launch.mesh import make_host_mesh
+
+    store = CheckpointStore(str(tmp_path))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4), "b": jnp.ones((4,))}
+    store.save(1, tree)
+
+    mesh = make_host_mesh()
+
+    def sharding_fn(like, mesh):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.tree.map(lambda _: NamedSharding(mesh, P()), like)
+
+    restored = restore_resharded(store, 1, jax.tree.map(np.zeros_like, tree),
+                                 mesh, sharding_fn)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_dryrun_cell_applicability_count():
+    from repro.launch.dryrun import iter_cells
+
+    cells = list(iter_cells())
+    assert len(cells) == 40
+    live = [c for c in cells if c[2]]
+    assert len(live) == 32

@@ -1,0 +1,149 @@
+"""The paper's writer-preferred reentrant RW lock: semantics tests."""
+
+import threading
+import time
+
+from repro.runtime.locks import RWLock
+
+
+def test_multiple_readers():
+    lock = RWLock()
+    acquired = []
+
+    def reader():
+        with lock.read():
+            acquired.append(1)
+            time.sleep(0.05)
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.monotonic() - t0
+    assert len(acquired) == 4
+    # readers overlap: total << 4 * 0.05
+    assert elapsed < 0.15
+
+
+def test_writer_excludes_readers():
+    lock = RWLock()
+    log = []
+
+    def writer():
+        with lock.write():
+            log.append("w_in")
+            time.sleep(0.05)
+            log.append("w_out")
+
+    def reader():
+        with lock.read():
+            log.append("r")
+
+    wt = threading.Thread(target=writer)
+    wt.start()
+    time.sleep(0.01)  # writer holds the lock now
+    rt = threading.Thread(target=reader)
+    rt.start()
+    wt.join()
+    rt.join()
+    assert log.index("w_out") < log.index("r")
+
+
+def test_writer_preference():
+    """Paper: 'from the moment a writer is waiting, all new readers have to
+    queue up' — the waiting writer beats a later-arriving reader."""
+    lock = RWLock()
+    order = []
+    reader_holding = threading.Event()
+    release_reader = threading.Event()
+
+    def long_reader():
+        with lock.read():
+            reader_holding.set()
+            release_reader.wait(2.0)
+        order.append("r0_done")
+
+    def writer():
+        lock.acquire_write()
+        order.append("writer")
+        lock.release_write()
+
+    def late_reader():
+        lock.acquire_read()
+        order.append("late_reader")
+        lock.release_read()
+
+    t0 = threading.Thread(target=long_reader)
+    t0.start()
+    reader_holding.wait(2.0)
+
+    tw = threading.Thread(target=writer)
+    tw.start()
+    # let the writer start waiting
+    for _ in range(100):
+        if lock.writers_waiting:
+            break
+        time.sleep(0.005)
+    assert lock.writers_waiting == 1
+
+    tr = threading.Thread(target=late_reader)
+    tr.start()
+    time.sleep(0.05)
+    # the late reader must be queued behind the waiting writer
+    assert "late_reader" not in order
+
+    release_reader.set()
+    tw.join(2.0)
+    tr.join(2.0)
+    assert order.index("writer") < order.index("late_reader")
+
+
+def test_reentrant_read():
+    lock = RWLock()
+    with lock.read():
+        with lock.read():
+            assert lock.readers == 1
+    assert lock.readers == 0
+
+
+def test_reentrant_write_and_read_in_write():
+    lock = RWLock()
+    with lock.write():
+        with lock.write():
+            pass
+        with lock.read():  # writer may read its own state
+            pass
+        assert lock.writer_active
+    assert not lock.writer_active
+
+
+def test_release_errors():
+    lock = RWLock()
+    try:
+        lock.release_read()
+        assert False
+    except RuntimeError:
+        pass
+    try:
+        lock.release_write()
+        assert False
+    except RuntimeError:
+        pass
+
+
+def test_acquire_timeout():
+    lock = RWLock()
+    holder = threading.Thread(target=lambda: _hold_write(lock, 0.2))
+    holder.start()
+    time.sleep(0.02)
+    assert lock.acquire_read(timeout=0.02) is False
+    holder.join()
+    assert lock.acquire_read(timeout=1.0) is True
+    lock.release_read()
+
+
+def _hold_write(lock, secs):
+    with lock.write():
+        time.sleep(secs)

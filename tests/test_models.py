@@ -1,0 +1,278 @@
+"""Model-layer tests: per-arch smoke (reduced config, forward + train step,
+shape + finiteness), decode consistency, MoE semantics, Mamba chunking."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.configs.base import SHAPES, cell_applicable
+from repro.models import lm
+from repro.models.frontends import synthetic_prefix
+from repro.models.mamba import mamba_block, mamba_decls
+from repro.models.moe import capacity, moe_ffn
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import make_schedule
+from repro.train.step import (
+    init_train_state,
+    make_train_batch,
+    make_train_step,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- per-arch smoke: one forward + one train step on CPU ----------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    state = init_train_state(KEY, cfg)
+    B, S = 2, 16
+    batch = make_train_batch(jax.random.fold_in(KEY, 1), cfg, B, S)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
+                                   make_schedule("wsd", 10)))
+    new_state, metrics = step(state, batch)
+    assert int(new_state.step) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params changed and are finite
+    for p_new, p_old in zip(jax.tree.leaves(new_state.params),
+                            jax.tree.leaves(state.params)):
+        assert np.isfinite(np.asarray(p_new, np.float32)).all()
+    # one more step decreases loss on the same batch (sanity of gradients)
+    s2, m2 = step(new_state, batch)
+    assert float(m2["loss"]) < float(metrics["loss"]) + 0.5
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_output_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(KEY, cfg)
+    B, S = 2, 16
+    s_text = S - cfg.prefix_len
+    toks = jax.random.randint(KEY, (B, s_text), 0, cfg.vocab)
+    pre = synthetic_prefix(KEY, cfg, B, jnp.float32)
+    logits, aux = jax.jit(lambda p, t, pe: lm.forward(p, t, cfg, pe))(
+        params, toks, pre
+    )
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits[..., : cfg.vocab])).all()
+    if cfg.vocab_padded != cfg.vocab:
+        # padded columns are masked to -inf-ish
+        assert float(jnp.max(logits[..., cfg.vocab:])) < -1e20
+
+
+# -- decode consistency --------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch", ["glm4-9b", "olmoe-1b-7b", "falcon-mamba-7b", "jamba-v0.1-52b"]
+)
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, prefix_len=0, frontend="none",
+                              capacity_factor=64.0)
+    params = lm.init_params(KEY, cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.fold_in(KEY, 1), (B, S), 0,
+                              cfg.vocab)
+    full, _ = jax.jit(lambda p, t: lm.forward(p, t, cfg))(params, toks)
+    cache = lm.init_decode_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg))
+    outs = []
+    for pos in range(S):
+        lg, cache = step(params, cache, toks[:, pos:pos + 1], jnp.int32(pos))
+        outs.append(lg[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(inc),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "jamba-v0.1-52b"])
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, prefix_len=0, frontend="none",
+                              capacity_factor=64.0)
+    params = lm.init_params(KEY, cfg)
+    B, S, P = 2, 16, 10
+    toks = jax.random.randint(jax.random.fold_in(KEY, 2), (B, S), 0,
+                              cfg.vocab)
+    full, _ = jax.jit(lambda p, t: lm.forward(p, t, cfg))(params, toks)
+    logits_pf, cache = jax.jit(
+        lambda p, t: lm.prefill_step(p, t, cfg, max_seq=S)
+    )(params, toks[:, :P])
+    np.testing.assert_allclose(np.asarray(logits_pf[:, 0]),
+                               np.asarray(full[:, P - 1]),
+                               rtol=1e-2, atol=1e-2)
+    step = jax.jit(lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg))
+    for pos in range(P, S):
+        lg, cache = step(params, cache, toks[:, pos:pos + 1], jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, pos]),
+                                   rtol=1e-2, atol=2e-2)
+
+
+def test_scan_vs_unrolled_layers_identical():
+    """The analysis-mode (unrolled) lowering computes the same function."""
+    cfg = get_smoke_config("glm4-9b")
+    cfg_scan = dataclasses.replace(cfg, n_layers=4)
+    cfg_unroll = dataclasses.replace(cfg, n_layers=4, scan_layers=False)
+    params = lm.init_params(KEY, cfg_scan)
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    a, _ = jax.jit(lambda p, t: lm.forward(p, t, cfg_scan))(params, toks)
+    b, _ = jax.jit(lambda p, t: lm.forward(p, t, cfg_unroll))(params, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+# -- MoE ------------------------------------------------------------------
+
+
+def test_moe_capacity_math():
+    cfg = get_config("olmoe-1b-7b")
+    c = capacity(cfg, 1024)
+    assert c >= 1024 * cfg.top_k // cfg.n_experts
+    assert c % 8 == 0
+
+
+def test_moe_drop_vs_nodrop():
+    """Capacity dropping is train-path semantics; no_drop must differ only
+    at saturated experts and never produce non-finite output."""
+    cfg = dataclasses.replace(get_smoke_config("olmoe-1b-7b"),
+                              capacity_factor=0.5)
+    decls_params = lm.init_params(KEY, cfg)
+    sub = jax.tree_util.tree_map(
+        lambda p: p[0], decls_params["layers"]
+    )["sub_0"]
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model), jnp.float32)
+    y_drop, aux = moe_ffn(sub["moe"], x, cfg)
+    y_nodrop, _ = moe_ffn(sub["moe"], x, cfg, no_drop=True)
+    assert np.isfinite(np.asarray(y_drop)).all()
+    assert np.isfinite(np.asarray(y_nodrop)).all()
+    assert float(aux) > 0.0
+    # with tiny capacity, some tokens must have been dropped
+    assert not np.allclose(np.asarray(y_drop), np.asarray(y_nodrop))
+
+
+def test_moe_all_tokens_routed_when_capacity_ample():
+    cfg = dataclasses.replace(get_smoke_config("olmoe-1b-7b"),
+                              capacity_factor=64.0)
+    params = lm.init_params(KEY, cfg)
+    sub = jax.tree_util.tree_map(lambda p: p[0], params["layers"])["sub_0"]
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    y1, _ = moe_ffn(sub["moe"], x, cfg)
+    y2, _ = moe_ffn(sub["moe"], x, cfg, no_drop=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+# -- Mamba ------------------------------------------------------------------
+
+
+def test_mamba_chunk_invariance():
+    """Chunked scan must equal single-chunk scan (associativity)."""
+    cfg = get_smoke_config("falcon-mamba-7b")
+    params = lm.init_params(KEY, cfg)
+    sub = jax.tree_util.tree_map(lambda p: p[0], params["layers"])["sub_0"]
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model), jnp.float32)
+    outs = {}
+    for chunk in (4, 8, 32):
+        c = dataclasses.replace(cfg, ssm_chunk=chunk)
+        outs[chunk] = np.asarray(mamba_block(sub["mamba"], x, c))
+    np.testing.assert_allclose(outs[4], outs[32], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs[8], outs[32], rtol=1e-4, atol=1e-5)
+
+
+def test_mamba_nondivisible_length():
+    cfg = get_smoke_config("falcon-mamba-7b")
+    params = lm.init_params(KEY, cfg)
+    sub = jax.tree_util.tree_map(lambda p: p[0], params["layers"])["sub_0"]
+    x = jax.random.normal(KEY, (1, 13, cfg.d_model), jnp.float32)  # 13 % 8 != 0
+    y = mamba_block(sub["mamba"], x, cfg)
+    assert y.shape == (1, 13, cfg.d_model)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_mamba_causality():
+    """Output at position t must not depend on inputs after t."""
+    cfg = get_smoke_config("falcon-mamba-7b")
+    params = lm.init_params(KEY, cfg)
+    sub = jax.tree_util.tree_map(lambda p: p[0], params["layers"])["sub_0"]
+    x1 = jax.random.normal(KEY, (1, 16, cfg.d_model), jnp.float32)
+    x2 = x1.at[:, 10:].set(jax.random.normal(jax.random.fold_in(KEY, 9),
+                                             (1, 6, cfg.d_model)))
+    y1 = np.asarray(mamba_block(sub["mamba"], x1, cfg))
+    y2 = np.asarray(mamba_block(sub["mamba"], x2, cfg))
+    np.testing.assert_allclose(y1[:, :10], y2[:, :10], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(y1[:, 10:], y2[:, 10:])
+
+
+# -- config/bookkeeping ----------------------------------------------------------
+
+
+def test_param_counts_match_declared_family():
+    """Analytic param counts should land near the published sizes."""
+    expectations = {
+        "internvl2-26b": (18e9, 26e9),   # LLM backbone only (ViT excluded)
+        "minicpm-2b": (2.0e9, 3.2e9),
+        "olmo-1b": (0.9e9, 1.4e9),
+        "phi3-mini-3.8b": (3.2e9, 4.2e9),
+        "glm4-9b": (8.0e9, 10.5e9),
+        "olmoe-1b-7b": (6.0e9, 8.0e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 45e9),
+        "musicgen-medium": (1.2e9, 2.2e9),
+        "falcon-mamba-7b": (6.4e9, 8.2e9),
+        "jamba-v0.1-52b": (48e9, 56e9),
+    }
+    for arch, (lo, hi) in expectations.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_active_params_less_than_total_for_moe():
+    for arch in ("olmoe-1b-7b", "phi3.5-moe-42b-a6.6b", "jamba-v0.1-52b"):
+        cfg = get_config(arch)
+        assert cfg.n_active_params() < cfg.n_params()
+    # olmoe: ~1B active of ~7B total
+    cfg = get_config("olmoe-1b-7b")
+    assert cfg.n_active_params() < 0.35 * cfg.n_params()
+
+
+def test_cell_applicability_rules():
+    live, skipped = 0, 0
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_applicable(cfg, shape)
+            if ok:
+                live += 1
+            else:
+                skipped += 1
+                assert shape.name == "long_500k"
+                assert cfg.full_attention
+    assert live == 32 and skipped == 8  # 40 assigned cells total
+
+
+def test_abstract_params_match_concrete():
+    cfg = get_smoke_config("jamba-v0.1-52b")
+    abstract = lm.abstract_params(cfg)
+    concrete = lm.init_params(KEY, cfg)
+    ja = jax.tree_util.tree_map(lambda a: (a.shape, str(a.dtype)), abstract)
+    jc = jax.tree_util.tree_map(lambda a: (a.shape, str(a.dtype)), concrete)
+    assert jax.tree_util.tree_structure(ja) == jax.tree_util.tree_structure(jc)
+    for a, c in zip(jax.tree.leaves(ja), jax.tree.leaves(jc)):
+        assert a == c
+
+
+def test_wsd_schedule_shape():
+    sched = make_schedule("wsd", 1000)
+    assert float(sched(0)) < 0.2            # warmup
+    assert abs(float(sched(500)) - 1.0) < 1e-6   # stable
+    assert float(sched(999)) < 0.5          # decay
+    cos = make_schedule("cosine", 1000)
+    assert float(cos(500)) < 1.0
