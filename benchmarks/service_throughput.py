@@ -1,0 +1,90 @@
+"""Serving sweep: offered load vs p50/p99 latency and batch occupancy.
+
+The serving axis of the perf trajectory: for each paradigm executor and
+offered-load level, a fixed request population is submitted at the target
+arrival rate and the service's own metrics report per-request latency
+percentiles, mean batch occupancy, and the modeled energy spend (the
+``benchmarks/energy.py`` model applied to batch runtimes).
+
+The expected shape mirrors queueing intuition: higher offered load raises
+latency but also raises occupancy — the micro-batcher converts pressure
+into coalescing, which is exactly the amortisation the paper buys with its
+single big GPU dispatch (Fig. 6's setup cost, paid once per batch here).
+
+    PYTHONPATH=src python benchmarks/service_throughput.py            # fast
+    PYTHONPATH=src python benchmarks/service_throughput.py --full
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+from typing import Dict, List
+
+# offered-load levels (requests/s) — low: batches mostly ride the deadline;
+# high: the backlog keeps batches full
+FAST_RATES = (50.0, 400.0)
+FULL_RATES = (25.0, 100.0, 400.0, 1600.0)
+EXECUTORS = ("pallas-kernel", "jax-ref")
+
+
+def run(fast: bool = True) -> List[Dict]:
+    from repro.launch.serve_mine import build_workload, drive
+    from repro.service import ClusteringService
+
+    n_requests = 24 if fast else 96
+    rates = FAST_RATES if fast else FULL_RATES
+    rows: List[Dict] = []
+    for executor in EXECUTORS:
+        # per-executor warm-up workload shares jit compiles across rates
+        for rate in rates:
+            workdir = tempfile.mkdtemp(prefix="svc_bench_")
+            try:
+                service = ClusteringService(
+                    workdir, max_batch=8, max_wait_s=0.01, cache_entries=0)
+                workload = build_workload(
+                    n_requests, tenants=4, algo="kmeans",
+                    features=2, clusters=4, points=16,
+                    seed=hash((executor, rate)) % 2**31)
+                with service:
+                    failures = drive(service, workload, rate, executor)
+                snap = service.metrics_snapshot()
+                rows.append(dict(
+                    executor=executor,
+                    offered_rps=rate,
+                    requests=snap["requests"],
+                    p50_latency_s=snap["p50_latency_s"],
+                    p99_latency_s=snap["p99_latency_s"],
+                    mean_occupancy=snap["mean_occupancy"],
+                    mean_batch_size=snap["mean_batch_size"],
+                    batches=snap["batches"],
+                    modeled_joules=snap["modeled_joules"],
+                    failures=sum(failures.values()),
+                ))
+            finally:
+                shutil.rmtree(workdir, ignore_errors=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    rows = run(fast=not args.full)
+    print("executor,offered_rps,requests,p50_ms,p99_ms,mean_occupancy,"
+          "mean_batch_size,batches,modeled_joules,failures")
+    for r in rows:
+        print(f"{r['executor']},{r['offered_rps']:.0f},{r['requests']},"
+              f"{r['p50_latency_s'] * 1e3:.2f},{r['p99_latency_s'] * 1e3:.2f},"
+              f"{r['mean_occupancy']:.3f},{r['mean_batch_size']:.2f},"
+              f"{r['batches']},{r['modeled_joules']:.3f},{r['failures']}")
+    # occupancy should not fall as offered load rises (pressure -> coalesce)
+    for executor in EXECUTORS:
+        occ = [r["mean_occupancy"] for r in rows if r["executor"] == executor]
+        print(f"# {executor}: occupancy trend {['%.2f' % o for o in occ]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,10 +47,24 @@ CORE_BIT = 0x4        # bit 2: core point
 FLAG_MASK = 0x7
 CLUSTER_SHIFT = 3     # cluster id lives in bits 3..15; 0 = noise
 
+# Largest cluster id the packed int16 word can carry: bit 15 is the sign
+# bit, so ids occupy bits 3..14 — 4095 clusters.  Beyond that, `labels <<
+# CLUSTER_SHIFT` wraps negative and silently corrupts every later unpack.
+MAX_CLUSTER_ID = np.iinfo(np.int16).max >> CLUSTER_SHIFT
+
 
 def pack_state(labels: jnp.ndarray, visited: jnp.ndarray,
                member: jnp.ndarray, core: jnp.ndarray) -> jnp.ndarray:
     """Pack per-point state into the paper's int16 word."""
+    if not isinstance(labels, jax.core.Tracer):
+        mx = int(jnp.max(labels)) if labels.size else 0
+        if mx > MAX_CLUSTER_ID:
+            raise ValueError(
+                f"cluster id {mx} does not fit the paper's int16 state word "
+                f"(bits {CLUSTER_SHIFT}..14 hold the cluster number, so at "
+                f"most {MAX_CLUSTER_ID} clusters are representable); "
+                f"shard the dataset or raise min_pts/eps"
+            )
     word = (labels.astype(jnp.int32) << CLUSTER_SHIFT)
     word = word | jnp.where(visited, VISITED_BIT, 0)
     word = word | jnp.where(member, REACHABLE_BIT, 0)
@@ -123,6 +137,13 @@ def _expand(x, frontier, cfg: DBSCANConfig):
     return expand_frontier_ref(x, frontier, cfg.eps)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _expand_step(x, frontier, cfg: DBSCANConfig):
+    """Module-level jitted expansion: cached across host-loop invocations, so
+    a service running many same-shaped requests compiles once per shape."""
+    return _expand(x, frontier, cfg)
+
+
 # --- fully jitted solver -----------------------------------------------------
 
 
@@ -179,48 +200,103 @@ def fit(x: jnp.ndarray, cfg: DBSCANConfig) -> DBSCANResult:
     )
 
 
-# --- host-driven, cancellable solver ----------------------------------------
+# --- host-driven, cancellable + resumable solver ----------------------------
 
 
-def fit_cancellable(
+@dataclasses.dataclass
+class DBSCANRunState:
+    """Preemption snapshot of a host-driven run.
+
+    ``packed`` is the paper's int16 word (labels + visited/member/core bits);
+    ``frontier`` is the pending BFS frontier of the cluster being expanded
+    when the run was interrupted (all-False at a cluster boundary).  Held as
+    host numpy so it can be checkpointed without touching device state.
+    """
+
+    packed: np.ndarray    # (n,) int16
+    frontier: np.ndarray  # (n,) bool
+    cid: int
+    nexp: int
+
+    def as_tree(self) -> dict:
+        """Checkpointable pytree (see repro.checkpoint.store)."""
+        return {
+            "packed": np.asarray(self.packed, np.int16),
+            "frontier": np.asarray(self.frontier, bool),
+            "cid": np.int32(self.cid),
+            "nexp": np.int32(self.nexp),
+        }
+
+    @staticmethod
+    def from_tree(tree: dict) -> "DBSCANRunState":
+        return DBSCANRunState(
+            packed=np.asarray(tree["packed"], np.int16),
+            frontier=np.asarray(tree["frontier"], bool),
+            cid=int(tree["cid"]),
+            nexp=int(tree["nexp"]),
+        )
+
+
+def fit_resumable(
     x: jnp.ndarray,
     cfg: DBSCANConfig,
     token: Optional[CancellationToken] = None,
+    *,
+    state: Optional[DBSCANRunState] = None,
+    valid_mask: Optional[jnp.ndarray] = None,
     on_progress: Optional[Callable[[int, int], None]] = None,
-) -> DBSCANResult:
+    on_state: Optional[Callable[[DBSCANRunState], None]] = None,
+    state_interval: int = 8,
+) -> Tuple[DBSCANResult, Optional[DBSCANRunState]]:
     """Host loop; the abort flag is polled between kernel executions, exactly
-    as in the paper.  State is carried in the paper's packed int16 word."""
+    as in the paper.  State is carried in the paper's packed int16 word.
+
+    ``state`` resumes a previously interrupted run mid-BFS; on cancellation
+    the returned second element is the snapshot to resume from (``None`` on
+    normal completion).  ``on_state`` is invoked with a snapshot every
+    ``state_interval`` expansions — the service's periodic-checkpoint hook.
+    ``valid_mask`` marks real rows in a padded array: masked-out rows can
+    never be core points (with min_pts=1 an isolated pad row would
+    otherwise seed a phantom singleton cluster).
+    """
     n = x.shape[0]
     deg = _degree(x, cfg)            # kernel launch 1 (main loop kernel)
     core = deg >= cfg.min_pts
+    if valid_mask is not None:
+        core = core & valid_mask
 
-    labels = jnp.zeros((n,), jnp.int32)
-    visited = jnp.zeros((n,), bool)
-    member = jnp.zeros((n,), bool)
-    cid = 0
-    nexp = 0
+    if state is not None:
+        labels, visited, member, _ = unpack_state(jnp.asarray(state.packed))
+        frontier = jnp.asarray(state.frontier)
+        cid = int(state.cid)
+        nexp = int(state.nexp)
+    else:
+        labels = jnp.zeros((n,), jnp.int32)
+        visited = jnp.zeros((n,), bool)
+        member = jnp.zeros((n,), bool)
+        frontier = jnp.zeros((n,), bool)
+        cid = 0
+        nexp = 0
     cancelled = False
-
-    expand = jax.jit(functools.partial(_expand, cfg=cfg))
 
     def _poll() -> bool:
         return token is not None and token.cancelled()
 
+    def _snapshot() -> DBSCANRunState:
+        return DBSCANRunState(
+            packed=np.asarray(pack_state(labels, visited, member, core)),
+            frontier=np.asarray(frontier),
+            cid=cid,
+            nexp=nexp,
+        )
+
     while True:
-        if _poll():
-            cancelled = True
-            break
-        todo = np.asarray(core & ~visited)
-        if not todo.any():
-            break
-        seed = int(np.argmax(todo))
-        cid += 1
-        frontier = jnp.zeros((n,), bool).at[seed].set(True)
+        # inner: expand the in-flight cluster's frontier to exhaustion
         while bool(frontier.any()):
             if _poll():
                 cancelled = True
                 break
-            reached = expand(x, frontier)      # expansion kernel launch
+            reached = _expand_step(x, frontier, cfg)  # expansion kernel launch
             nexp += 1
             new = reached & (labels == 0)
             labels = jnp.where(new, cid, labels)
@@ -229,17 +305,45 @@ def fit_cancellable(
             frontier = new & core
             if on_progress is not None:
                 on_progress(cid, nexp)
+            if on_state is not None and nexp % state_interval == 0:
+                on_state(_snapshot())
         if cancelled:
             break
+        if _poll():
+            cancelled = True
+            break
+        # outer: seed the next cluster at the lowest-index unvisited core pt
+        todo = np.asarray(core & ~visited)
+        if not todo.any():
+            break
+        cid += 1
+        if cid > MAX_CLUSTER_ID:
+            raise ValueError(
+                f"dataset produced more than {MAX_CLUSTER_ID} clusters — the "
+                f"paper's int16 state word cannot represent cluster id {cid}"
+            )
+        frontier = jnp.zeros((n,), bool).at[int(np.argmax(todo))].set(True)
 
     packed = pack_state(labels, visited, member, core)
-    return DBSCANResult(
+    result = DBSCANResult(
         labels=finish(packed),
         core_mask=core,
         n_clusters=jnp.int32(cid),
         expansions=jnp.int32(nexp),
         cancelled=cancelled,
     )
+    return result, (_snapshot() if cancelled else None)
+
+
+def fit_cancellable(
+    x: jnp.ndarray,
+    cfg: DBSCANConfig,
+    token: Optional[CancellationToken] = None,
+    on_progress: Optional[Callable[[int, int], None]] = None,
+) -> DBSCANResult:
+    """Cancellable host loop (see :func:`fit_resumable` for the state API)."""
+    result, _ = fit_resumable(x, cfg, token, on_progress=on_progress)
+    return result
 
 
 # --- sequential oracle (numpy BFS; used by tests and benchmarks) -------------

@@ -27,7 +27,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.runtime.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.kmeans import KMeansConfig, kmeans_step
@@ -71,14 +71,16 @@ def make_sharded_kmeans_step(mesh: Mesh, cfg: KMeansConfig):
 
 def _pvary(x, axis: str):
     """Mark a constant as device-varying over `axis` (shard_map VMA typing)."""
-    if hasattr(jax.lax, "pvary"):
-        return jax.lax.pvary(x, (axis,))
-    return jax.lax.pcast(x, (axis,), to="varying")  # newer spelling
+    from repro.runtime.compat import pvary
+
+    return pvary(x, axis)
 
 
 def _ring_body(x_rows, x_cols0, combine, init, axis: str):
     """Rotate column shards around the ring, folding tiles into `init`."""
-    p = jax.lax.axis_size(axis)
+    from repro.runtime.compat import axis_size
+
+    p = axis_size(axis)
     me = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % p) for i in range(p)]
     init = jax.tree.map(lambda a: _pvary(a, axis), init)

@@ -117,13 +117,36 @@ class JobStore:
             row = self._conn.execute(q, args).fetchone()
             if row is None:
                 return None
-            self._conn.execute(
+            # state guard + rowcount: another process may have claimed it
+            # between our SELECT and UPDATE (the store is shared on disk)
+            cur = self._conn.execute(
                 "UPDATE jobs SET state=?, owner_pid=?, heartbeat=?, updated=?"
-                " WHERE job_id=?",
-                (JobState.RUNNING.value, os.getpid(), now, now, row[0]),
+                " WHERE job_id=? AND state IN (?, ?)",
+                (JobState.RUNNING.value, os.getpid(), now, now, row[0],
+                 JobState.ENQUEUED.value, JobState.SUSPENDED.value),
             )
             self._conn.commit()
+            if cur.rowcount != 1:
+                return None
         return self.get(int(row[0]))
+
+    def claim(self, job_id: int) -> Optional[Job]:
+        """Atomically claim a *specific* runnable job (service batches enqueue
+        and immediately claim their own record; resume claims by id)."""
+        now = time.time()
+        with self._lock:
+            # single guarded UPDATE: atomic against concurrent claimers in
+            # other processes sharing the store
+            cur = self._conn.execute(
+                "UPDATE jobs SET state=?, owner_pid=?, heartbeat=?, updated=?"
+                " WHERE job_id=? AND state IN (?, ?)",
+                (JobState.RUNNING.value, os.getpid(), now, now, job_id,
+                 JobState.ENQUEUED.value, JobState.SUSPENDED.value),
+            )
+            self._conn.commit()
+            if cur.rowcount != 1:
+                return None
+        return self.get(job_id)
 
     def report_progress(
         self,

@@ -97,6 +97,39 @@ def kmeans_step(x, c, cfg: KMeansConfig):
     return assign, c_new, shift, jnp.sum(d2)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def kmeans_step_jit(x, c, cfg: KMeansConfig):
+    """Module-level jitted step: cached across host-loop invocations, so a
+    service running many same-shaped requests compiles once per shape."""
+    return kmeans_step(x, c, cfg)
+
+
+def masked_kmeans_step(x, c, mask, cfg: KMeansConfig):
+    """Lloyd step over a padded batch item: masked-out rows carry no weight.
+
+    With ``mask`` all-True this is bit-for-bit :func:`kmeans_step` on the
+    same rows; padded rows are still assigned (row-wise kernel) but
+    contribute zero to the centroid sums, counts, and inertia — the
+    service's micro-batcher pads requests to a bucket size without
+    perturbing their results.
+    """
+    assign, d2 = _assign(x, c, cfg)
+    w = mask.astype(jnp.float32)
+    onehot = jax.nn.one_hot(assign, cfg.k, dtype=jnp.float32) * w[:, None]
+    sums = jnp.einsum("nk,nd->kd", onehot, x.astype(jnp.float32))
+    counts = jnp.sum(onehot, axis=0)
+    has_pts = counts > 0
+    safe = jnp.where(has_pts, counts, 1.0)[:, None]
+    c_new = jnp.where(has_pts[:, None], sums / safe, c)
+    shift = jnp.sum(jnp.abs(c_new - c))
+    return assign, c_new, shift, jnp.sum(d2 * w)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def masked_kmeans_step_jit(x, c, mask, cfg: KMeansConfig):
+    return masked_kmeans_step(x, c, mask, cfg)
+
+
 def init_centroids(key: jax.Array, x: jax.Array, cfg: KMeansConfig) -> jax.Array:
     if cfg.init == "sample":
         # paper: "initial cluster centers were selected randomly by each
@@ -168,21 +201,30 @@ def fit_cancellable(
     cfg: KMeansConfig,
     token: Optional[CancellationToken] = None,
     on_progress: Optional[Callable[[int, float], None]] = None,
+    *,
+    centroids: Optional[jax.Array] = None,
+    start_iteration: int = 0,
 ) -> KMeansResult:
-    """Host-driven Lloyd loop; abort flag polled between jitted steps."""
-    step = jax.jit(functools.partial(kmeans_step, cfg=cfg))
-    c = init_centroids(key, x, cfg)
+    """Host-driven Lloyd loop; abort flag polled between jitted steps.
+
+    ``centroids``/``start_iteration`` resume an interrupted run: the full
+    run state of Lloyd's algorithm is the centroid matrix plus the iteration
+    counter, both of which live in the returned result — checkpoint those,
+    pass them back in, and the loop continues exactly where it stopped.
+    """
+    c = (jnp.asarray(centroids, jnp.float32) if centroids is not None
+         else init_centroids(key, x, cfg))
     assign = jnp.zeros((x.shape[0],), jnp.int32)
     inertia = jnp.float32(jnp.inf)
-    it = 0
+    it = start_iteration
     converged = False
     cancelled = False
-    for it in range(1, cfg.max_iters + 1):
+    for it in range(start_iteration + 1, cfg.max_iters + 1):
         if token is not None and token.cancelled():
             cancelled = True
             it -= 1
             break
-        assign, c, shift, inertia = step(x, c)
+        assign, c, shift, inertia = kmeans_step_jit(x, c, cfg)
         if on_progress is not None:
             on_progress(it, float(shift))
         if float(shift) < cfg.tol:

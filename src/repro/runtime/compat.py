@@ -1,0 +1,52 @@
+"""Version-tolerant jax API aliases (the shard_map move + kwarg rename).
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+Callers in this repo import :func:`shard_map` from here and always spell the
+kwarg ``check_vma``; the shim maps it onto whatever the installed jax expects
+— the same survive-version-bumps discipline as
+:mod:`repro.kernels._compat` for Pallas compiler params.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+try:  # jax >= 0.6: public API, check_vma kwarg
+    from jax import shard_map as _shard_map
+
+    _MODERN = True
+except ImportError:  # older jax: experimental namespace, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _MODERN = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True) -> Any:
+    if _MODERN:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    # Old jax cannot express device-varying typing (no pvary), so its
+    # check_rep static analysis rejects valid ring collectives — disable it;
+    # the check never affects numerics.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def axis_size(axis: str) -> int:
+    """Static mapped-axis size inside shard_map (old jax: the psum idiom)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def pvary(x, axis: str):
+    """Mark a constant device-varying over ``axis`` (no-op on old jax,
+    which has no varying-manual-axes typing to satisfy)."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, (axis,))
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, (axis,), to="varying")
+    return x

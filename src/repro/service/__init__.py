@@ -1,0 +1,61 @@
+"""Clustering-as-a-service: batched multi-tenant mining on the paper's cores.
+
+The paper ships a single-activity app that submits one mining job at a time
+to WorkManager.  This subsystem is that app generalised to a service front
+door: many tenants submit DBSCAN/K-Means requests, an admission queue keeps
+them fair and bounded, a micro-batcher coalesces compatible requests into
+padded batches, a paradigm registry picks the execution backend per batch
+(the paper's GPU-vs-CPU comparison as a runtime dispatch decision), and a
+preemption-safe executor runs each batch as a durable job that survives
+being killed at any moment.
+
+    queue     — admission control: per-tenant fairness, bounded backlog
+    batcher   — micro-batching: coalesce + pad + max-wait deadline
+    dispatch  — paradigm registry + cost model (pallas-kernel/jax-ref/numpy-mt)
+    executor  — durable batch execution: jobs + checkpoints + resume
+    cache     — content-hash result cache
+    metrics   — latency percentiles, batch occupancy, energy proxy
+    service   — the facade tying it together
+"""
+
+from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
+from repro.service.cache import ResultCache, content_key
+from repro.service.dispatch import (
+    EXECUTOR_JAX_REF,
+    EXECUTOR_NUMPY_MT,
+    EXECUTOR_PALLAS,
+    ParadigmRegistry,
+    default_registry,
+)
+from repro.service.executor import BatchExecutor, BatchOutcome
+from repro.service.metrics import ServiceMetrics
+from repro.service.queue import (
+    AdmissionQueue,
+    BacklogFull,
+    JobSuspended,
+    MiningRequest,
+    RequestDropped,
+)
+from repro.service.service import ClusteringService
+
+__all__ = [
+    "AdmissionQueue",
+    "BacklogFull",
+    "BatchExecutor",
+    "BatchKey",
+    "BatchOutcome",
+    "ClusteringService",
+    "EXECUTOR_JAX_REF",
+    "EXECUTOR_NUMPY_MT",
+    "EXECUTOR_PALLAS",
+    "JobSuspended",
+    "MicroBatch",
+    "MicroBatcher",
+    "MiningRequest",
+    "ParadigmRegistry",
+    "RequestDropped",
+    "ResultCache",
+    "ServiceMetrics",
+    "content_key",
+    "default_registry",
+]

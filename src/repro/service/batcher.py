@@ -1,0 +1,146 @@
+"""Micro-batching scheduler: coalesce compatible requests into padded batches.
+
+Compatible means *same compiled program*: same algorithm, feature dimension,
+and algorithm parameters (eps/min_pts for DBSCAN, k/init/tol for K-Means).
+Items inside a batch are padded to a shared power-of-two point-count bucket,
+so every batch with the same key and bucket reuses one jitted executable —
+the service amortises XLA compilation (the paper's dominant GPU "setup
+time", Fig. 6) across requests instead of paying it per request.
+
+Flush policy: a staged group is emitted when it reaches ``max_batch``
+requests (occupancy 1.0) or when its oldest request has waited
+``max_wait_s`` (the latency ceiling a half-empty batch is allowed to add).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.service.queue import AdmissionQueue, MiningRequest, canonical_params
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchKey:
+    """Compatibility class of a request: one key == one compiled program.
+
+    The explicit executor override is part of the key — a request pinned to
+    ``jax-ref`` must never ride in a ``pallas-kernel`` batch.
+    """
+
+    algo: str
+    features: int
+    params: tuple  # canonical_params() view
+    executor: Optional[str] = None
+
+    @staticmethod
+    def for_request(req: MiningRequest) -> "BatchKey":
+        return BatchKey(
+            algo=req.algo,
+            features=req.features,
+            params=canonical_params(req.algo, req.params),
+            executor=req.executor,
+        )
+
+    @property
+    def params_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+
+def bucket_points(n: int, minimum: int = 8) -> int:
+    """Next power-of-two >= n: pad shapes recur, so compiles are reused."""
+    b = minimum
+    while b < n:
+        b <<= 1
+    return b
+
+
+_BATCH_IDS = itertools.count(1)
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    key: BatchKey
+    requests: List[MiningRequest]
+    capacity: int                 # max_batch at formation time
+    created: float = dataclasses.field(default_factory=time.time)
+    batch_id: int = dataclasses.field(default_factory=lambda: next(_BATCH_IDS))
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def occupancy(self) -> float:
+        """Filled fraction of the batch's slots (1.0 = full coalesce)."""
+        return len(self.requests) / max(1, self.capacity)
+
+    @property
+    def n_max(self) -> int:
+        """Shared padded point-count bucket for every item."""
+        return bucket_points(max(r.n_points for r in self.requests))
+
+
+class MicroBatcher:
+    """Stages drained requests per key and flushes full or ripe groups."""
+
+    def __init__(
+        self,
+        queue: AdmissionQueue,
+        *,
+        max_batch: int = 8,
+        max_wait_s: float = 0.02,
+    ) -> None:
+        self.queue = queue
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._lock = threading.Lock()
+        self._staged: Dict[BatchKey, List[MiningRequest]] = {}
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._staged.values())
+
+    def _form(self, key: BatchKey, now: float) -> MicroBatch:
+        group = self._staged[key]
+        take, rest = group[: self.max_batch], group[self.max_batch:]
+        if rest:
+            self._staged[key] = rest
+        else:
+            del self._staged[key]
+        for r in take:
+            r.batched = now
+        return MicroBatch(key=key, requests=take, capacity=self.max_batch)
+
+    def poll(self, now: Optional[float] = None) -> List[MicroBatch]:
+        """Drain the admission queue, then flush every full or ripe group."""
+        now = time.time() if now is None else now
+        batches: List[MicroBatch] = []
+        with self._lock:
+            for req in self.queue.drain():
+                self._staged.setdefault(
+                    BatchKey.for_request(req), []).append(req)
+            for key in list(self._staged.keys()):
+                while key in self._staged and (
+                    len(self._staged[key]) >= self.max_batch
+                    or now - min(r.submitted for r in self._staged[key])
+                    >= self.max_wait_s
+                ):
+                    batches.append(self._form(key, now))
+        return batches
+
+    def flush_all(self, now: Optional[float] = None) -> List[MicroBatch]:
+        """Emit everything staged regardless of deadline (shutdown drain)."""
+        now = time.time() if now is None else now
+        batches: List[MicroBatch] = []
+        with self._lock:
+            for req in self.queue.drain():
+                self._staged.setdefault(
+                    BatchKey.for_request(req), []).append(req)
+            for key in list(self._staged.keys()):
+                while key in self._staged:
+                    batches.append(self._form(key, now))
+        return batches

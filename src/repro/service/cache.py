@@ -1,0 +1,86 @@
+"""Content-hash result cache: repeated datasets skip compute entirely.
+
+Keyed by SHA-256 of (algorithm, canonical params, data shape/dtype/bytes),
+so two tenants submitting the same dataset with the same parameters share
+one computation — the paper's app recomputes from scratch on every run;
+a service must not.  LRU-bounded by entry count; thread-safe.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.service.queue import canonical_params
+
+
+def content_key(algo: str, params: Dict[str, Any], data: np.ndarray) -> str:
+    data = np.ascontiguousarray(data)
+    h = hashlib.sha256()
+    h.update(algo.encode())
+    h.update(repr(canonical_params(algo, params)).encode())
+    # per-item params that change the result (e.g. kmeans seed) must still
+    # differentiate cache entries even though they don't split batches
+    h.update(repr(sorted(
+        (k, v) for k, v in params.items()
+        if k not in dict(canonical_params(algo, params))
+    )).encode())
+    h.update(str(data.shape).encode())
+    h.update(str(data.dtype).encode())
+    h.update(data.tobytes())
+    return h.hexdigest()
+
+
+def _copy_result(result: Dict[str, Any]) -> Dict[str, Any]:
+    """Array values are copied: a tenant mutating its returned labels must
+    never corrupt the cached entry another tenant will be served."""
+    return {
+        k: (v.copy() if isinstance(v, np.ndarray) else v)
+        for k, v in result.items()
+    }
+
+
+class ResultCache:
+    """LRU over result dicts (labels + scalars), keyed by content hash."""
+
+    def __init__(self, max_entries: int = 256) -> None:
+        self.max_entries = max_entries
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return _copy_result(entry)
+
+    def put(self, key: str, result: Dict[str, Any]) -> None:
+        if self.max_entries <= 0:
+            return
+        with self._lock:
+            self._entries[key] = _copy_result(result)
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+            }

@@ -1,0 +1,372 @@
+"""Paradigm registry + cost model — the paper's comparison as live dispatch.
+
+The paper benchmarks the same two algorithms across competing paradigms
+(GPU kernels vs. single/multi-threaded CPU) and finds the winner depends on
+workload size: kernel launch + setup overhead buries small jobs, while
+compiled/accelerated code wins at scale (Figs. 4-6).  Here that comparison
+is a *runtime decision*: every batch is routed to one of three executors by
+a work estimate (point count x feature dim x batch size), unless the
+request pinned one explicitly.
+
+    pallas-kernel — the TPU Pallas kernels (interpret mode off-TPU);
+                    the paper's GPU paradigm
+    jax-ref       — jitted XLA reference implementations;
+                    the paper's compiled-C paradigm
+    numpy-mt      — numpy across a thread pool over batch items;
+                    the paper's multi-threaded CPU paradigm
+
+All device discovery goes through ``runtime.backend.discover_backend()`` —
+the wrapper-library discipline: nothing here touches jax device state at
+import time.
+
+Executors run *items* (one request inside a padded batch) and report
+completion and periodic mid-item state through callbacks, so the batch
+executor can checkpoint and later resume a preempted batch without the
+paradigm knowing how durability works.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import dbscan, kmeans
+from repro.runtime import backend as backend_mod
+
+EXECUTOR_PALLAS = "pallas-kernel"
+EXECUTOR_JAX_REF = "jax-ref"
+EXECUTOR_NUMPY_MT = "numpy-mt"
+
+# Below this many fused ops, dispatch/launch overhead dominates and the
+# multi-threaded host paradigm wins (the paper's small-workload regime).
+SMALL_WORK_THRESHOLD = 1 << 21
+_KMEANS_ITERS_ESTIMATE = 20
+
+
+@dataclasses.dataclass
+class ItemView:
+    """One request inside a padded batch, as the paradigm sees it."""
+
+    index: int
+    x_pad: np.ndarray          # (n_max, d) — padding already applied
+    length: int                # real point count
+    seed: int
+    mid_state: Optional[Dict[str, np.ndarray]] = None  # resume snapshot
+
+
+@dataclasses.dataclass
+class RunOutcome:
+    """How a paradigm run ended.  ``item_index``/``mid_state`` identify the
+    item that was mid-flight on suspension (None at an item boundary)."""
+
+    suspended: bool = False
+    item_index: Optional[int] = None
+    mid_state: Optional[Dict[str, np.ndarray]] = None
+
+
+ItemDone = Callable[[int, np.ndarray, Dict[str, Any]], None]
+ItemState = Callable[[int, Dict[str, np.ndarray]], None]
+
+
+def _cancelled(token) -> bool:
+    return token is not None and token.cancelled()
+
+
+class Paradigm:
+    """Base executor: runs batch items, reports via callbacks."""
+
+    name: str = "abstract"
+    resumable_mid_item: bool = False
+
+    def run(
+        self,
+        algo: str,
+        params: Dict[str, Any],
+        items: List[ItemView],
+        token,
+        on_item_done: ItemDone,
+        on_item_state: ItemState,
+        state_interval: int = 8,
+    ) -> RunOutcome:
+        raise NotImplementedError
+
+
+class JaxParadigm(Paradigm):
+    """Shared host-loop driver for the two jitted paradigms; they differ
+    only in whether the Pallas kernels or the XLA reference runs the math
+    (the paper's 'same code, different device' portability story)."""
+
+    resumable_mid_item = True
+
+    def __init__(self, name: str, use_kernel: bool) -> None:
+        self.name = name
+        self.use_kernel = use_kernel
+
+    # -- DBSCAN --------------------------------------------------------------
+
+    def _run_dbscan_item(self, item, cfg, token, on_item_done, on_item_state,
+                         state_interval):
+        import jax.numpy as jnp
+
+        state = (dbscan.DBSCANRunState.from_tree(item.mid_state)
+                 if item.mid_state is not None else None)
+        result, run_state = dbscan.fit_resumable(
+            jnp.asarray(item.x_pad), cfg, token,
+            state=state,
+            valid_mask=jnp.arange(item.x_pad.shape[0]) < item.length,
+            on_state=lambda s: on_item_state(item.index, s.as_tree()),
+            state_interval=state_interval,
+        )
+        if result.cancelled:
+            assert run_state is not None
+            return RunOutcome(suspended=True, item_index=item.index,
+                              mid_state=run_state.as_tree())
+        labels = np.asarray(result.labels)
+        real = labels[: item.length]
+        on_item_done(item.index, labels, {
+            "n_clusters": int(real.max(initial=0)),
+            "noise": int(np.sum(real == 0)),
+            "expansions": int(result.expansions),
+        })
+        return RunOutcome()
+
+    # -- K-Means -------------------------------------------------------------
+
+    def _run_kmeans_item(self, item, cfg, token, on_item_done, on_item_state,
+                         state_interval):
+        import jax
+        import jax.numpy as jnp
+
+        x_pad = jnp.asarray(item.x_pad)
+        mask = jnp.arange(item.x_pad.shape[0]) < item.length
+        if item.mid_state is not None:
+            c = jnp.asarray(item.mid_state["centroids"], jnp.float32)
+            it = int(item.mid_state["iteration"])
+        else:
+            c = kmeans.init_centroids(
+                jax.random.PRNGKey(item.seed), x_pad[: item.length], cfg)
+            it = 0
+        assign = jnp.zeros((item.x_pad.shape[0],), jnp.int32)
+        inertia = float("inf")
+        converged = False
+        while it < cfg.max_iters:
+            if _cancelled(token):
+                return RunOutcome(
+                    suspended=True, item_index=item.index,
+                    mid_state={
+                        "centroids": np.asarray(c, np.float32),
+                        "iteration": np.int32(it),
+                    })
+            assign, c, shift, inertia = kmeans.masked_kmeans_step_jit(
+                x_pad, c, mask, cfg)
+            it += 1
+            if it % state_interval == 0:
+                on_item_state(item.index, {
+                    "centroids": np.asarray(c, np.float32),
+                    "iteration": np.int32(it),
+                })
+            if float(shift) < cfg.tol:
+                converged = True
+                break
+        on_item_done(item.index, np.asarray(assign, np.int16), {
+            "inertia": float(inertia),
+            "iterations": it,
+            "converged": bool(converged),
+            "centroids": np.asarray(c, np.float32),
+        })
+        return RunOutcome()
+
+    def run(self, algo, params, items, token, on_item_done, on_item_state,
+            state_interval=8):
+        backend_mod.discover_backend()  # lazy-load before first device use
+        if algo == "dbscan":
+            cfg = _dbscan_config(params, use_kernel=self.use_kernel)
+            run_item = self._run_dbscan_item
+        else:
+            cfg = _kmeans_config(params, use_kernel=self.use_kernel)
+            run_item = self._run_kmeans_item
+        for item in items:
+            if _cancelled(token):
+                return RunOutcome(suspended=True)
+            outcome = run_item(item, cfg, token, on_item_done, on_item_state,
+                               state_interval)
+            if outcome.suspended:
+                return outcome
+        return RunOutcome()
+
+
+class NumpyMTParadigm(Paradigm):
+    """Multi-threaded host paradigm: numpy per item, threads across items.
+
+    Mid-item state is not checkpointable here (no step boundary to poll),
+    so preemption is honoured at item boundaries: finished items land in
+    the batch state, unfinished ones rerun on resume.
+    """
+
+    name = EXECUTOR_NUMPY_MT
+    resumable_mid_item = False
+
+    def __init__(self, max_workers: Optional[int] = None) -> None:
+        import os
+
+        self.max_workers = max_workers or min(8, os.cpu_count() or 1)
+
+    @staticmethod
+    def _dbscan_item(item: ItemView, cfg) -> tuple:
+        x = np.asarray(item.x_pad[: item.length], np.float32)
+        real = dbscan.fit_oracle(x, cfg)
+        labels = np.zeros((item.x_pad.shape[0],), np.int16)
+        labels[: item.length] = real.astype(np.int16)
+        return labels, {
+            "n_clusters": int(real.max(initial=0)),
+            "noise": int(np.sum(real == 0)),
+            "expansions": 0,
+        }
+
+    @staticmethod
+    def _kmeans_item(item: ItemView, cfg) -> tuple:
+        import jax
+
+        x = np.asarray(item.x_pad[: item.length], np.float32)
+        # identical seeding across paradigms: results are paradigm-portable
+        import jax.numpy as jnp
+
+        c = np.asarray(kmeans.init_centroids(
+            jax.random.PRNGKey(item.seed), jnp.asarray(x), cfg))
+        it = 0
+        converged = False
+        assign = np.zeros((x.shape[0],), np.int64)
+        inertia = float("inf")
+        while it < cfg.max_iters:
+            d2 = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+            assign = d2.argmin(1)
+            inertia = float(d2.min(1).sum())
+            c_new = c.copy()
+            for j in range(cfg.k):
+                m = assign == j
+                if m.any():   # empty cluster keeps its center (paper)
+                    c_new[j] = x[m].mean(0)
+            shift = float(np.abs(c_new - c).sum())
+            c = c_new
+            it += 1
+            if shift < cfg.tol:
+                converged = True
+                break
+        labels = np.zeros((item.x_pad.shape[0],), np.int16)
+        labels[: item.length] = assign.astype(np.int16)
+        return labels, {
+            "inertia": inertia,
+            "iterations": it,
+            "converged": converged,
+            "centroids": c.astype(np.float32),
+        }
+
+    def run(self, algo, params, items, token, on_item_done, on_item_state,
+            state_interval=8):
+        if algo == "dbscan":
+            cfg = _dbscan_config(params, use_kernel=False)
+            work = self._dbscan_item
+        else:
+            cfg = _kmeans_config(params, use_kernel=False)
+            work = self._kmeans_item
+        suspended = threading.Event()
+
+        def run_one(item: ItemView):
+            if _cancelled(token):
+                suspended.set()
+                return
+            labels, scalars = work(item, cfg)
+            if _cancelled(token):
+                # completed anyway; still record it so resume skips the item
+                suspended.set()
+            on_item_done(item.index, labels, scalars)
+
+        with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+            list(pool.map(run_one, items))
+        if suspended.is_set() or _cancelled(token):
+            return RunOutcome(suspended=True)
+        return RunOutcome()
+
+
+# -- config plumbing ---------------------------------------------------------
+
+
+def _dbscan_config(params: Dict[str, Any], *, use_kernel: bool):
+    return dbscan.DBSCANConfig(
+        eps=float(params["eps"]),
+        min_pts=int(params["min_pts"]),
+        use_kernel=use_kernel,
+    )
+
+
+def _kmeans_config(params: Dict[str, Any], *, use_kernel: bool):
+    return kmeans.KMeansConfig(
+        k=int(params["k"]),
+        max_iters=int(params.get("max_iters", kmeans.PAPER_MAX_ITERS)),
+        tol=float(params.get("tol", kmeans.PAPER_TOL)),
+        init=str(params.get("init", "sample")),
+        use_kernel=use_kernel,
+    )
+
+
+# -- registry + cost model ---------------------------------------------------
+
+
+def estimate_work(algo: str, n: int, d: int, batch_size: int,
+                  params: Dict[str, Any]) -> float:
+    """Fused-op estimate for one batch (the dispatch cost model input)."""
+    if algo == "dbscan":
+        per_item = float(n) * n * d          # O(n^2 d) adjacency dominates
+    else:
+        k = int(params.get("k", 8))
+        per_item = float(n) * k * d * _KMEANS_ITERS_ESTIMATE
+    return per_item * batch_size
+
+
+class ParadigmRegistry:
+    def __init__(self) -> None:
+        self._paradigms: Dict[str, Paradigm] = {}
+
+    def register(self, paradigm: Paradigm) -> None:
+        self._paradigms[paradigm.name] = paradigm
+
+    def get(self, name: str) -> Paradigm:
+        try:
+            return self._paradigms[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown executor {name!r}; registered: {self.names()}"
+            ) from None
+
+    def names(self) -> List[str]:
+        return sorted(self._paradigms)
+
+    def select(
+        self,
+        algo: str,
+        n: int,
+        d: int,
+        batch_size: int,
+        params: Dict[str, Any],
+        explicit: Optional[str] = None,
+    ) -> str:
+        """Cost-model dispatch (explicit override wins, and is validated)."""
+        if explicit is not None:
+            self.get(explicit)
+            return explicit
+        if estimate_work(algo, n, d, batch_size, params) < SMALL_WORK_THRESHOLD:
+            return EXECUTOR_NUMPY_MT
+        backend = backend_mod.discover_backend()
+        return EXECUTOR_PALLAS if backend.is_tpu else EXECUTOR_JAX_REF
+
+
+def default_registry() -> ParadigmRegistry:
+    reg = ParadigmRegistry()
+    reg.register(JaxParadigm(EXECUTOR_PALLAS, use_kernel=True))
+    reg.register(JaxParadigm(EXECUTOR_JAX_REF, use_kernel=False))
+    reg.register(NumpyMTParadigm())
+    return reg

@@ -1,0 +1,376 @@
+"""Durable batch execution: every micro-batch is a resumable job.
+
+The paper's WorkManager contract, per batch: execution is wrapped in a
+:class:`repro.core.jobs.JobStore` record, a
+:class:`~repro.core.cancellation.CancellationToken` is threaded into the
+DBSCAN/K-Means host loops (the abort flag polled between kernel launches),
+and partial state — the packed DBSCAN word + BFS frontier, or the K-Means
+centroid matrix — is checkpointed through
+:class:`repro.checkpoint.store.CheckpointStore`.  A batch killed at any
+moment is either SUSPENDED with a verified checkpoint (graceful preemption)
+or left RUNNING with a stale heartbeat (hard crash); on restart
+:meth:`BatchExecutor.resume_suspended` sweeps both back to completion from
+their last checkpoint — the activity-reattach path, now per-request.
+
+Checkpoint layout (one store per batch job, ``<workdir>/ckpt/job_<id>``):
+the step-0 checkpoint carries the padded input data, so a restarted process
+can rebuild the batch without the original requests in memory; later steps
+carry per-item labels plus the mid-item algorithm state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.core.cancellation import CancellationToken
+from repro.core.jobs import JobState, JobStore
+from repro.runtime.preemption import HoldAlive
+from repro.service.batcher import MicroBatch
+from repro.service.dispatch import ItemView, ParadigmRegistry, default_registry
+
+SERVICE_JOB_KIND = "service-batch"
+
+# DBSCAN pad isolation: padded rows sit on a far diagonal in feature 0 so
+# each pad is outside eps of every real point *and* of every other pad —
+# they come out as noise and are sliced off (see kernels/neighbor/ops.py
+# for the same trick at the block level).
+_PAD_SPACING_FACTOR = 16.0
+
+
+@dataclasses.dataclass
+class BatchOutcome:
+    job_id: int
+    algo: str
+    executor: str
+    suspended: bool
+    resumed: bool
+    exec_s: float
+    size: int
+    capacity: int
+    n_max: int
+    request_ids: List[int]
+    tenants: List[str]
+    results: Optional[List[Dict[str, Any]]] = None  # per item, when complete
+    cache_keys: Optional[List[str]] = None          # per item content hashes
+
+
+def _pad_item(x: np.ndarray, n_max: int, algo: str, eps: float,
+              data_high: float) -> np.ndarray:
+    n, d = x.shape
+    out = np.zeros((n_max, d), np.float32)
+    out[:n] = x
+    if algo == "dbscan" and n < n_max:
+        spacing = max(_PAD_SPACING_FACTOR * eps, 1.0)
+        out[n:, 0] = data_high + spacing * (1.0 + np.arange(n_max - n))
+    return out
+
+
+class BatchExecutor:
+    """Runs micro-batches as durable, preemption-safe jobs."""
+
+    def __init__(
+        self,
+        workdir: str,
+        *,
+        registry: Optional[ParadigmRegistry] = None,
+        heartbeat_timeout: float = 60.0,
+        checkpoint_every: int = 8,
+        keep_last: int = 2,
+    ) -> None:
+        self.workdir = workdir
+        os.makedirs(workdir, exist_ok=True)
+        self.jobs = JobStore(os.path.join(workdir, "jobs.db"),
+                             heartbeat_timeout=heartbeat_timeout)
+        self.registry = registry or default_registry()
+        self.checkpoint_every = checkpoint_every
+        self.keep_last = keep_last
+
+    def _ckpt(self, job_id: int) -> CheckpointStore:
+        return CheckpointStore(
+            os.path.join(self.workdir, "ckpt", f"job_{job_id}"),
+            keep_last=self.keep_last,
+        )
+
+    # -- batch formation -----------------------------------------------------
+
+    def run_batch(
+        self,
+        batch: MicroBatch,
+        token: Optional[CancellationToken] = None,
+        progress_hook=None,
+    ) -> BatchOutcome:
+        """Execute a fresh micro-batch (enqueue -> claim -> run)."""
+        key = batch.key
+        params = key.params_dict
+        executor = self.registry.select(
+            key.algo,
+            n=max(r.n_points for r in batch.requests),
+            d=key.features,
+            batch_size=batch.size,
+            params=params,
+            explicit=key.executor,
+        )
+        n_max, d = batch.n_max, key.features
+        size = batch.size
+        eps = float(params.get("eps", 1.0))
+        data_high = max(
+            float(np.max(r.data)) if r.data.size else 0.0
+            for r in batch.requests
+        )
+        data = np.stack([
+            _pad_item(np.asarray(r.data, np.float32), n_max, key.algo, eps,
+                      data_high)
+            for r in batch.requests
+        ])
+        job_params = {
+            "algo": key.algo,
+            "executor": executor,
+            "params": params,
+            "size": size,
+            "n_max": n_max,
+            "features": d,
+            "capacity": batch.capacity,
+            "lengths": [r.n_points for r in batch.requests],
+            "seeds": [int(r.params.get("seed", 0)) for r in batch.requests],
+            "request_ids": [r.request_id for r in batch.requests],
+            "tenants": [r.tenant for r in batch.requests],
+            # content hashes survive in the job record so a resumed batch
+            # can re-populate the result cache after a restart
+            "cache_keys": [r.cache_key or "" for r in batch.requests],
+        }
+        job_id = self.jobs.enqueue(SERVICE_JOB_KIND, job_params)
+        job = self.jobs.claim(job_id)
+        assert job is not None
+        for r in batch.requests:
+            r.job_id = job_id
+
+        state = self._blank_state(job_params)
+        state["data"] = data
+        ckpt = self._ckpt(job_id)
+        # step-0 checkpoint: the batch is durable from this point on
+        path = ckpt.save(0, state, metadata={"params": job_params})
+        self.jobs.report_progress(job_id, step=0, checkpoint_path=path)
+        return self._execute(job_id, job_params, state, token,
+                             progress_hook=progress_hook, resumed=False)
+
+    # -- state trees ---------------------------------------------------------
+
+    def _blank_state(self, jp: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        size, n_max, d = jp["size"], jp["n_max"], jp["features"]
+        state: Dict[str, np.ndarray] = {
+            "data": np.zeros((size, n_max, d), np.float32),
+            "labels": np.zeros((size, n_max), np.int16),
+            "done": np.zeros((size,), bool),
+            "active": np.asarray(False),
+            "item": np.int32(0),
+            "inertia": np.zeros((size,), np.float32),
+            "iterations": np.zeros((size,), np.int32),
+            "converged": np.zeros((size,), bool),
+            "n_clusters": np.zeros((size,), np.int32),
+            "noise": np.zeros((size,), np.int32),
+            "expansions": np.zeros((size,), np.int32),
+        }
+        if jp["algo"] == "dbscan":
+            state["mid.packed"] = np.zeros((n_max,), np.int16)
+            state["mid.frontier"] = np.zeros((n_max,), bool)
+            state["mid.cid"] = np.int32(0)
+            state["mid.nexp"] = np.int32(0)
+        else:
+            k = int(jp["params"]["k"])
+            state["mid.centroids"] = np.zeros((k, d), np.float32)
+            state["mid.iteration"] = np.int32(0)
+        return state
+
+    @staticmethod
+    def _mid_tree(state: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        return {k[len("mid."):]: v for k, v in state.items()
+                if k.startswith("mid.")}
+
+    # -- execution -----------------------------------------------------------
+
+    def _execute(
+        self,
+        job_id: int,
+        jp: Dict[str, Any],
+        state: Dict[str, np.ndarray],
+        token: Optional[CancellationToken],
+        *,
+        progress_hook=None,
+        resumed: bool,
+    ) -> BatchOutcome:
+        paradigm = self.registry.get(jp["executor"])
+        ckpt = self._ckpt(job_id)
+        lock = threading.Lock()
+        save_step = [int(ckpt.latest_step() or 0)]
+        events = [0]
+
+        def save() -> str:
+            # every checkpoint is self-contained (data rides along), so GC
+            # of old steps can never strand a resume
+            save_step[0] += 1
+            path = ckpt.save(save_step[0], state, metadata={"params": jp})
+            self.jobs.report_progress(job_id, step=save_step[0],
+                                      checkpoint_path=path)
+            return path
+
+        def on_item_state(i: int, tree: Dict[str, np.ndarray]) -> None:
+            with lock:
+                state["active"] = np.asarray(True)
+                state["item"] = np.int32(i)
+                for k, v in tree.items():
+                    state[f"mid.{k}"] = np.asarray(v)
+                save()
+            events[0] += 1
+            if progress_hook is not None:
+                progress_hook(job_id, i, events[0])
+
+        def on_item_done(i: int, labels: np.ndarray,
+                         scalars: Dict[str, Any]) -> None:
+            with lock:
+                state["labels"][i] = labels.astype(np.int16)
+                state["done"][i] = True
+                state["active"] = np.asarray(False)
+                state["item"] = np.int32(i + 1)
+                for name in ("inertia", "iterations", "converged",
+                             "n_clusters", "noise", "expansions"):
+                    if name in scalars:
+                        state[name][i] = scalars[name]
+                save()
+            events[0] += 1
+            if progress_hook is not None:
+                progress_hook(job_id, i, events[0])
+
+        # remaining items, current (possibly mid-flight) one first
+        items: List[ItemView] = []
+        active = bool(state["active"])
+        current = int(state["item"])
+        for i in range(jp["size"]):
+            if bool(state["done"][i]):
+                continue
+            mid = None
+            if active and i == current and paradigm.resumable_mid_item:
+                mid = self._mid_tree(state)
+            items.append(ItemView(
+                index=i,
+                x_pad=np.asarray(state["data"][i]),
+                length=int(jp["lengths"][i]),
+                seed=int(jp["seeds"][i]),
+                mid_state=mid,
+            ))
+
+        t0 = time.time()
+        hb = max(0.05, min(1.0, self.jobs.heartbeat_timeout / 4.0))
+        error: Optional[BaseException] = None
+        with HoldAlive(self.jobs, job_id, interval=hb):
+            try:
+                outcome = paradigm.run(
+                    jp["algo"], jp["params"], items, token,
+                    on_item_done, on_item_state,
+                    state_interval=self.checkpoint_every,
+                )
+            except BaseException as e:
+                error = e
+        exec_s = time.time() - t0
+
+        if error is not None:
+            self.jobs.report_progress(job_id, error=repr(error))
+            self.jobs.transition(job_id, JobState.FAILED)
+            raise error
+
+        common = dict(
+            job_id=job_id, algo=jp["algo"], executor=jp["executor"],
+            resumed=resumed, exec_s=exec_s, size=jp["size"],
+            capacity=jp["capacity"], n_max=jp["n_max"],
+            request_ids=list(jp["request_ids"]), tenants=list(jp["tenants"]),
+            cache_keys=list(jp.get("cache_keys") or []),
+        )
+        if outcome.suspended:
+            with lock:
+                if outcome.item_index is not None:
+                    state["active"] = np.asarray(True)
+                    state["item"] = np.int32(outcome.item_index)
+                    for k, v in (outcome.mid_state or {}).items():
+                        state[f"mid.{k}"] = np.asarray(v)
+                else:
+                    state["active"] = np.asarray(False)
+                save()
+            self.jobs.transition(job_id, JobState.SUSPENDED)
+            return BatchOutcome(suspended=True, **common)
+
+        with lock:
+            save()
+        self.jobs.transition(job_id, JobState.SUCCEEDED)
+        return BatchOutcome(
+            suspended=False, results=self._results(jp, state), **common)
+
+    @staticmethod
+    def _results(jp: Dict[str, Any],
+                 state: Dict[str, np.ndarray]) -> List[Dict[str, Any]]:
+        out = []
+        for i in range(jp["size"]):
+            n = int(jp["lengths"][i])
+            r: Dict[str, Any] = {
+                "algo": jp["algo"],
+                "executor": jp["executor"],
+                "labels": np.asarray(state["labels"][i][:n]),
+            }
+            if jp["algo"] == "dbscan":
+                r["n_clusters"] = int(state["n_clusters"][i])
+                r["noise"] = int(state["noise"][i])
+                r["expansions"] = int(state["expansions"][i])
+            else:
+                r["inertia"] = float(state["inertia"][i])
+                r["iterations"] = int(state["iterations"][i])
+                r["converged"] = bool(state["converged"][i])
+            out.append(r)
+        return out
+
+    # -- restart / resume ----------------------------------------------------
+
+    def resume_suspended(
+        self,
+        token: Optional[CancellationToken] = None,
+        progress_hook=None,
+    ) -> List[BatchOutcome]:
+        """The reattach path: sweep orphans, resume every SUSPENDED batch.
+
+        RUNNING jobs whose owner died (stale heartbeat) are first swept to
+        SUSPENDED by :meth:`JobStore.recover_orphans`, then every suspended
+        service batch is claimed and driven to completion from its latest
+        verified checkpoint.
+        """
+        self.jobs.recover_orphans()
+        outcomes: List[BatchOutcome] = []
+        for job in self.jobs.list_jobs(JobState.SUSPENDED):
+            if job.kind != SERVICE_JOB_KIND:
+                continue
+            if token is not None and token.cancelled():
+                break
+            claimed = self.jobs.claim(job.job_id)
+            if claimed is None:
+                continue
+            jp = job.params
+            ckpt = self._ckpt(job.job_id)
+            step = ckpt.latest_step()
+            if step is None:
+                self.jobs.report_progress(
+                    job.job_id, error="no checkpoint to resume from")
+                self.jobs.transition(job.job_id, JobState.FAILED)
+                continue
+            template = self._blank_state(jp)
+            restored = ckpt.restore(step, template)
+            # np.array (not asarray): device buffers restore as read-only
+            # views, and the state dict is mutated in place during execution
+            state = {k: np.array(v) for k, v in restored.items()}
+            outcomes.append(self._execute(
+                job.job_id, jp, state, token,
+                progress_hook=progress_hook, resumed=True,
+            ))
+        return outcomes

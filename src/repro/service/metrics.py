@@ -1,0 +1,181 @@
+"""Service metrics: latency percentiles, batch occupancy, energy proxy.
+
+The energy proxy is the model from ``benchmarks/energy.py`` (the paper's
+Fig. 9 finding: power draw is roughly constant per device class, so energy
+differences come from runtime — E = P_active * t).  Per-batch execution
+seconds times the active-power constant gives modeled joules per paradigm,
+putting an energy axis on every serving run without hardware counters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from collections import defaultdict, deque
+from typing import Any, Deque, Dict, List, Optional
+
+# Same constant as benchmarks/energy.py (tablet-class active power, W).
+P_ACTIVE_WATTS = 3.0
+
+# Percentiles are computed over a sliding window so a long-lived service
+# never grows its metric state without bound; totals are kept as counters.
+DEFAULT_WINDOW = 10_000
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    rank = max(1, math.ceil(q / 100.0 * len(ordered)))
+    return ordered[min(rank, len(ordered)) - 1]
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    tenant: str
+    algo: str
+    executor: str
+    latency_s: float
+    queue_wait_s: float
+    cache_hit: bool
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    algo: str
+    executor: str
+    size: int
+    capacity: int
+    n_max: int
+    exec_s: float
+    resumed: bool
+
+    @property
+    def occupancy(self) -> float:
+        return self.size / max(1, self.capacity)
+
+    @property
+    def modeled_joules(self) -> float:
+        return P_ACTIVE_WATTS * self.exec_s
+
+
+class ServiceMetrics:
+    """Thread-safe accumulator; snapshot() renders the serving scorecard.
+
+    Per-record state lives in bounded sliding windows (percentiles are
+    window-local); lifetime totals live in plain counters.
+    """
+
+    def __init__(self, window: int = DEFAULT_WINDOW) -> None:
+        self._lock = threading.Lock()
+        self._requests: Deque[RequestRecord] = deque(maxlen=window)
+        self._batches: Deque[BatchRecord] = deque(maxlen=max(1, window // 4))
+        self.suspended_batches = 0
+        self.resumed_batches = 0
+        self.total_requests = 0
+        self.total_cache_hits = 0
+        self.total_batches = 0
+        self.total_joules = 0.0
+
+    def record_request(
+        self,
+        *,
+        tenant: str,
+        algo: str,
+        executor: str,
+        latency_s: float,
+        queue_wait_s: float = 0.0,
+        cache_hit: bool = False,
+    ) -> None:
+        with self._lock:
+            self._requests.append(RequestRecord(
+                tenant=tenant, algo=algo, executor=executor,
+                latency_s=latency_s, queue_wait_s=queue_wait_s,
+                cache_hit=cache_hit,
+            ))
+            self.total_requests += 1
+            if cache_hit:
+                self.total_cache_hits += 1
+
+    def record_batch(
+        self,
+        *,
+        algo: str,
+        executor: str,
+        size: int,
+        capacity: int,
+        n_max: int,
+        exec_s: float,
+        resumed: bool = False,
+    ) -> None:
+        with self._lock:
+            self._batches.append(BatchRecord(
+                algo=algo, executor=executor, size=size, capacity=capacity,
+                n_max=n_max, exec_s=exec_s, resumed=resumed,
+            ))
+            self.total_batches += 1
+            self.total_joules += P_ACTIVE_WATTS * exec_s
+            if resumed:
+                self.resumed_batches += 1
+
+    def record_suspended(self) -> None:
+        with self._lock:
+            self.suspended_batches += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            requests = list(self._requests)
+            batches = list(self._batches)
+            suspended = self.suspended_batches
+            resumed = self.resumed_batches
+            totals = {
+                "requests": self.total_requests,
+                "cache_hits": self.total_cache_hits,
+                "batches": self.total_batches,
+                "modeled_joules": self.total_joules,
+            }
+
+        latencies = [r.latency_s for r in requests]
+        waits = [r.queue_wait_s for r in requests]
+        by_executor: Dict[str, Dict[str, Any]] = {}
+        groups: Dict[str, List[RequestRecord]] = defaultdict(list)
+        for r in requests:
+            groups[r.executor].append(r)
+        batch_groups: Dict[str, List[BatchRecord]] = defaultdict(list)
+        for b in batches:
+            batch_groups[b.executor].append(b)
+        for name in sorted(set(groups) | set(batch_groups)):
+            rs, bs = groups.get(name, []), batch_groups.get(name, [])
+            ls = [r.latency_s for r in rs]
+            by_executor[name] = {
+                "requests": len(rs),
+                "p50_latency_s": percentile(ls, 50),
+                "p99_latency_s": percentile(ls, 99),
+                "batches": len(bs),
+                "mean_occupancy": (
+                    sum(b.occupancy for b in bs) / len(bs) if bs else 0.0),
+                "exec_s": sum(b.exec_s for b in bs),
+                "modeled_joules": sum(b.modeled_joules for b in bs),
+            }
+
+        return {
+            "totals": totals,           # lifetime; the rest is window-local
+            "requests": len(requests),
+            "cache_hits": sum(1 for r in requests if r.cache_hit),
+            "p50_latency_s": percentile(latencies, 50),
+            "p99_latency_s": percentile(latencies, 99),
+            "p50_queue_wait_s": percentile(waits, 50),
+            "batches": len(batches),
+            "mean_occupancy": (
+                sum(b.occupancy for b in batches) / len(batches)
+                if batches else 0.0),
+            "mean_batch_size": (
+                sum(b.size for b in batches) / len(batches)
+                if batches else 0.0),
+            "suspended_batches": suspended,
+            "resumed_batches": resumed,
+            "modeled_joules": sum(b.modeled_joules for b in batches),
+            "by_executor": by_executor,
+        }

@@ -1,0 +1,223 @@
+"""Admission queue — per-tenant fairness with a bounded backlog.
+
+The service front door.  Requests land in per-tenant FIFOs and are drained
+round-robin, so one chatty tenant cannot starve the rest (the paper's
+single-user activity generalised to many users).  Backlog bounds are
+enforced at admission: a full queue rejects with :class:`BacklogFull`
+instead of buffering unboundedly — load shedding happens at the door, not
+by OOM in the batcher.
+
+Durability note: the admission queue is in-memory.  A request becomes
+durable the moment the executor forms its batch job and writes the step-0
+checkpoint (see :mod:`repro.service.executor`); anything still queued when
+the process dies must be resubmitted — mirroring the paper, where only jobs
+already handed to WorkManager survive the activity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from collections import OrderedDict, deque
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+ALGORITHMS = ("dbscan", "kmeans")
+
+# Per-request parameters that never affect batch compatibility (carried per
+# item inside a batch rather than in its key).
+PER_ITEM_PARAMS = ("seed",)
+
+
+class BacklogFull(RuntimeError):
+    """Admission rejected: global or per-tenant backlog bound hit."""
+
+
+class RequestDropped(RuntimeError):
+    """The service stopped before this request was batched; resubmit."""
+
+
+class JobSuspended(RuntimeError):
+    """The batch holding this request was preempted mid-flight; it is
+    checkpointed under ``job_id`` and will be resumed on restart."""
+
+    def __init__(self, job_id: int) -> None:
+        super().__init__(
+            f"batch job {job_id} suspended; resume_suspended() after restart"
+        )
+        self.job_id = job_id
+
+
+def canonical_params(algo: str, params: Dict[str, Any]) -> tuple:
+    """Batch-compatibility key view of ``params`` (per-item keys dropped)."""
+    return tuple(sorted(
+        (k, v) for k, v in params.items() if k not in PER_ITEM_PARAMS
+    ))
+
+
+_REQUEST_IDS = itertools.count(1)
+
+
+@dataclasses.dataclass
+class MiningRequest:
+    """One tenant request plus its completion handle."""
+
+    tenant: str
+    algo: str                      # "dbscan" | "kmeans"
+    data: np.ndarray               # (n, d) float32
+    params: Dict[str, Any]         # eps/min_pts or k (+ optional seed, ...)
+    executor: Optional[str] = None  # explicit paradigm override
+    request_id: int = dataclasses.field(
+        default_factory=lambda: next(_REQUEST_IDS))
+    submitted: float = dataclasses.field(default_factory=time.time)
+
+    # -- filled in as the request moves through the service -----------------
+    batched: float = 0.0           # when the micro-batcher claimed it
+    completed: float = 0.0
+    cache_hit: bool = False
+    cache_key: Optional[str] = None
+    job_id: Optional[int] = None
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+    _result: Optional[Dict[str, Any]] = dataclasses.field(
+        default=None, repr=False)
+    _error: Optional[BaseException] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def n_points(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def features(self) -> int:
+        return int(self.data.shape[1])
+
+    # -- completion handle ---------------------------------------------------
+
+    def resolve(self, result: Dict[str, Any]) -> None:
+        self._result = result
+        self.completed = time.time()
+        self._done.set()
+
+    def fail(self, error: BaseException) -> None:
+        self._error = error
+        self.completed = time.time()
+        self._done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> Dict[str, Any]:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} not complete after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-complete seconds (None while in flight)."""
+        if not self._done.is_set():
+            return None
+        return self.completed - self.submitted
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.batched == 0.0:
+            return None
+        return self.batched - self.submitted
+
+
+def validate_request(req: MiningRequest) -> None:
+    if req.algo not in ALGORITHMS:
+        raise ValueError(f"unknown algo {req.algo!r}; want one of {ALGORITHMS}")
+    data = np.asarray(req.data)
+    if data.ndim != 2 or data.shape[0] < 1 or data.shape[1] < 1:
+        raise ValueError(f"data must be (n, d) with n,d >= 1, got {data.shape}")
+    if req.algo == "kmeans":
+        k = req.params.get("k")
+        if not isinstance(k, int) or k < 1:
+            raise ValueError("kmeans request needs integer param 'k' >= 1")
+        if k > data.shape[0]:
+            raise ValueError(f"k={k} exceeds n={data.shape[0]} points")
+    else:
+        eps = req.params.get("eps")
+        min_pts = req.params.get("min_pts")
+        if eps is None or min_pts is None:
+            raise ValueError("dbscan request needs params 'eps' and 'min_pts'"
+                             " (use DBSCANConfig.paper_defaults to derive)")
+        if float(eps) <= 0 or int(min_pts) < 1:
+            raise ValueError(f"bad dbscan params eps={eps} min_pts={min_pts}")
+
+
+class AdmissionQueue:
+    """Bounded, tenant-fair FIFO-of-FIFOs (thread-safe)."""
+
+    def __init__(self, max_backlog: int = 256,
+                 max_per_tenant: int = 64) -> None:
+        self.max_backlog = max_backlog
+        self.max_per_tenant = max_per_tenant
+        self._lock = threading.Lock()
+        # OrderedDict keeps a stable tenant rotation order (insertion order,
+        # rotated on every drain so no tenant is permanently first).
+        self._tenants: "OrderedDict[str, Deque[MiningRequest]]" = OrderedDict()
+        self._depth = 0
+        self.rejected = 0
+
+    def submit(self, req: MiningRequest) -> None:
+        validate_request(req)
+        with self._lock:
+            pending = self._tenants.get(req.tenant)
+            tenant_depth = len(pending) if pending is not None else 0
+            if self._depth >= self.max_backlog:
+                self.rejected += 1
+                raise BacklogFull(
+                    f"global backlog full ({self.max_backlog}); shed load")
+            if tenant_depth >= self.max_per_tenant:
+                self.rejected += 1
+                raise BacklogFull(
+                    f"tenant {req.tenant!r} backlog full "
+                    f"({self.max_per_tenant}); shed load")
+            if pending is None:
+                pending = deque()
+                self._tenants[req.tenant] = pending
+            pending.append(req)
+            self._depth += 1
+
+    def drain(self, limit: Optional[int] = None) -> List[MiningRequest]:
+        """Pull up to ``limit`` requests, one per tenant per rotation."""
+        out: List[MiningRequest] = []
+        with self._lock:
+            while self._depth and (limit is None or len(out) < limit):
+                for tenant in list(self._tenants.keys()):
+                    q = self._tenants[tenant]
+                    if q:
+                        out.append(q.popleft())
+                        self._depth -= 1
+                    if not q:
+                        del self._tenants[tenant]
+                    if limit is not None and len(out) >= limit:
+                        break
+                else:
+                    # full rotation: move the first tenant to the back so
+                    # the next drain starts one position later
+                    if len(self._tenants) > 1:
+                        first, q = next(iter(self._tenants.items()))
+                        del self._tenants[first]
+                        self._tenants[first] = q
+        return out
+
+    def depth(self, tenant: Optional[str] = None) -> int:
+        with self._lock:
+            if tenant is not None:
+                q = self._tenants.get(tenant)
+                return len(q) if q is not None else 0
+            return self._depth
+
+    def __len__(self) -> int:
+        return self.depth()

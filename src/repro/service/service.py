@@ -1,0 +1,239 @@
+"""The clustering service facade: submit -> batch -> dispatch -> execute.
+
+One worker thread drives the pipeline: the micro-batcher drains the
+admission queue and emits ready batches; each batch runs through the
+paradigm executor as a durable job.  The cache is consulted at submit time
+(hits never enter the queue).  ``stop(preempt=True)`` is the activity-
+suspend path: the shared token cancels, the in-flight batch checkpoints
+and parks SUSPENDED, and a later process picks it up with
+:meth:`ClusteringService.resume_suspended`.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cancellation import CancellationToken, CancelReason
+from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
+from repro.service.cache import ResultCache, content_key
+from repro.service.dispatch import ParadigmRegistry, default_registry
+from repro.service.executor import BatchExecutor, BatchOutcome
+from repro.service.metrics import ServiceMetrics
+from repro.service.queue import (
+    AdmissionQueue,
+    JobSuspended,
+    MiningRequest,
+    RequestDropped,
+)
+
+
+class ClusteringService:
+    def __init__(
+        self,
+        workdir: str,
+        *,
+        max_batch: int = 8,
+        max_wait_s: float = 0.02,
+        max_backlog: int = 256,
+        max_per_tenant: int = 64,
+        cache_entries: int = 256,
+        registry: Optional[ParadigmRegistry] = None,
+        heartbeat_timeout: float = 60.0,
+        checkpoint_every: int = 8,
+        poll_interval: float = 0.002,
+    ) -> None:
+        self.queue = AdmissionQueue(max_backlog=max_backlog,
+                                    max_per_tenant=max_per_tenant)
+        self.batcher = MicroBatcher(self.queue, max_batch=max_batch,
+                                    max_wait_s=max_wait_s)
+        self.executor = BatchExecutor(
+            workdir,
+            registry=registry or default_registry(),
+            heartbeat_timeout=heartbeat_timeout,
+            checkpoint_every=checkpoint_every,
+        )
+        self.cache = ResultCache(max_entries=cache_entries)
+        self.metrics = ServiceMetrics()
+        self.token = CancellationToken()
+        self.poll_interval = poll_interval
+        self._inflight: Dict[int, MiningRequest] = {}  # request_id -> req
+        self._lock = threading.Lock()
+        self._running = False
+        self._stopped = False
+        self._worker: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "ClusteringService":
+        if self._running:
+            return self
+        self.token.reset()
+        self._running = True
+        self._stopped = False
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="clustering-service")
+        self._worker.start()
+        return self
+
+    def __enter__(self) -> "ClusteringService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def stop(self, preempt: bool = False, timeout: float = 30.0) -> None:
+        """Graceful stop drains everything staged; ``preempt=True`` is the
+        OS-suspend path — the in-flight batch checkpoints and SUSPENDs."""
+        if preempt:
+            self.token.cancel(CancelReason.PREEMPTION)
+        self._running = False
+        with self._lock:
+            self._stopped = True
+        if self._worker is not None:
+            self._worker.join(timeout)
+            self._worker = None
+        # anything that slipped into the queue around shutdown would
+        # otherwise wait forever — no worker will ever drain it
+        self._drop_undurable()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(
+        self,
+        tenant: str,
+        algo: str,
+        data: np.ndarray,
+        *,
+        params: Dict[str, Any],
+        executor: Optional[str] = None,
+    ) -> MiningRequest:
+        data = np.ascontiguousarray(np.asarray(data, np.float32))
+        req = MiningRequest(tenant=tenant, algo=algo, data=data,
+                            params=dict(params), executor=executor)
+        # reject params the batch key cannot hash at the door, not in the
+        # worker thread (an unhashable value would kill the service loop)
+        try:
+            hash(BatchKey.for_request(req))
+        except TypeError as e:
+            raise ValueError(
+                f"params values must be hashable (they form the batch "
+                f"compatibility key): {e}") from None
+        req.cache_key = content_key(algo, req.params, data)
+        cached = self.cache.get(req.cache_key)
+        if cached is not None:
+            req.cache_hit = True
+            req.resolve(cached)
+            self.metrics.record_request(
+                tenant=tenant, algo=algo,
+                executor=str(cached.get("executor", "cache")),
+                latency_s=req.latency or 0.0, cache_hit=True)
+            return req
+        with self._lock:
+            # check-and-enqueue under the same lock stop() takes before its
+            # final drop pass, so no request can slip in behind shutdown
+            if self._stopped or self.token.cancelled():
+                req.fail(RequestDropped(
+                    "service is stopped/preempted; resubmit after restart"))
+                return req
+            self.queue.submit(req)   # raises BacklogFull at the door
+            self._inflight[req.request_id] = req
+        return req
+
+    # -- worker loop ---------------------------------------------------------
+
+    def _loop(self) -> None:
+        while self._running and not self.token.cancelled():
+            try:
+                batches = self.batcher.poll()
+            except Exception:
+                # a poisoned request must not kill the serving loop
+                time.sleep(self.poll_interval)
+                continue
+            if not batches:
+                time.sleep(self.poll_interval)
+                continue
+            for batch in batches:
+                self._run_batch(batch)
+        if self._running is False and not self.token.cancelled():
+            # graceful stop: drain whatever is staged before exiting
+            for batch in self.batcher.flush_all():
+                self._run_batch(batch)
+        if self.token.cancelled():
+            self._drop_undurable()
+
+    def _run_batch(self, batch: MicroBatch) -> None:
+        try:
+            outcome = self.executor.run_batch(batch, token=self.token)
+        except BaseException as e:
+            for req in batch.requests:
+                self._finish(req)
+                req.fail(e)
+            return
+        self._absorb(batch.requests, outcome)
+
+    def _absorb(self, requests: List[MiningRequest],
+                outcome: BatchOutcome) -> None:
+        self.metrics.record_batch(
+            algo=outcome.algo, executor=outcome.executor, size=outcome.size,
+            capacity=outcome.capacity, n_max=outcome.n_max,
+            exec_s=outcome.exec_s, resumed=outcome.resumed)
+        if outcome.suspended:
+            self.metrics.record_suspended()
+            for req in requests:
+                self._finish(req)
+                req.fail(JobSuspended(outcome.job_id))
+            return
+        assert outcome.results is not None
+        for req, result in zip(requests, outcome.results):
+            self._finish(req)
+            if req.cache_key:
+                self.cache.put(req.cache_key, result)
+            req.resolve(result)
+            self.metrics.record_request(
+                tenant=req.tenant, algo=req.algo, executor=outcome.executor,
+                latency_s=req.latency or 0.0,
+                queue_wait_s=req.queue_wait or 0.0)
+
+    def _finish(self, req: MiningRequest) -> None:
+        with self._lock:
+            self._inflight.pop(req.request_id, None)
+
+    def _drop_undurable(self) -> None:
+        """Preempted before batching: these requests never became durable."""
+        for batch in self.batcher.flush_all():
+            for req in batch.requests:
+                self._finish(req)
+                req.fail(RequestDropped(
+                    f"request {req.request_id} was still queued when the "
+                    f"service was preempted; resubmit"))
+
+    # -- restart path --------------------------------------------------------
+
+    def resume_suspended(self) -> List[BatchOutcome]:
+        """Reattach: complete batches suspended by a previous process.
+
+        Results are returned (and re-cached) rather than delivered to
+        request handles — the handles died with the old process.
+        """
+        outcomes = self.executor.resume_suspended(token=self.token)
+        for outcome in outcomes:
+            self.metrics.record_batch(
+                algo=outcome.algo, executor=outcome.executor,
+                size=outcome.size, capacity=outcome.capacity,
+                n_max=outcome.n_max, exec_s=outcome.exec_s, resumed=True)
+            if outcome.results and outcome.cache_keys:
+                for ckey, result in zip(outcome.cache_keys, outcome.results):
+                    if ckey:
+                        self.cache.put(ckey, result)
+        return outcomes
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        snap = self.metrics.snapshot()
+        snap["cache"] = self.cache.stats()
+        snap["queue_depth"] = len(self.queue)
+        snap["queue_rejected"] = self.queue.rejected
+        return snap

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from _hypo_shim import HealthCheck, given, settings, strategies as st
 
 from repro.core import dbscan, kmeans
 from repro.core.cancellation import CancellationToken, CancelReason
@@ -227,9 +227,11 @@ def test_kmeans_cancel_latency():
 def test_minibatch_kmeans_reasonable(rng_key):
     x, _, _ = make_blobs(rng_key, ClusterSpec(2, 4, 512))
     full = kmeans.fit(jax.random.PRNGKey(1), x, kmeans.KMeansConfig(k=4))
+    # mini-batch is init-sensitive: random "sample" seeding can collapse two
+    # centers onto one blob and never recover from partial updates
     mb = kmeans.minibatch_fit(jax.random.PRNGKey(1), x,
-                              kmeans.KMeansConfig(k=4), batch_size=256,
-                              steps=100)
+                              kmeans.KMeansConfig(k=4, init="kmeans++"),
+                              batch_size=256, steps=100)
     assert float(mb.inertia) < 3.0 * float(full.inertia)
 
 

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from _hypo_shim import HealthCheck, given, settings, strategies as st
 
 from repro.kernels.distance.ops import assign_clusters
 from repro.kernels.distance.ref import assign_clusters_ref

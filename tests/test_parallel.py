@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from _hypo_shim import HealthCheck, given, settings, strategies as st
 
 from repro.data.tokens import synthetic_token_batch, synthetic_token_batches
 from repro.kernels.attention.ops import flash_attention
