@@ -1,55 +1,73 @@
-"""Serving sweep: offered load vs p50/p99 latency and batch occupancy.
+"""Serving sweep: offered load vs p50/p99 latency, occupancy, lane overlap.
 
-The serving axis of the perf trajectory: for each paradigm executor and
-offered-load level, a fixed request population is submitted at the target
-arrival rate and the service's own metrics report per-request latency
-percentiles, mean batch occupancy, and the modeled energy spend (the
-``benchmarks/energy.py`` model applied to batch runtimes).
+Two axes of the perf trajectory:
 
-The expected shape mirrors queueing intuition: higher offered load raises
-latency but also raises occupancy — the micro-batcher converts pressure
-into coalescing, which is exactly the amortisation the paper buys with its
-single big GPU dispatch (Fig. 6's setup cost, paid once per batch here).
+1. **Throughput sweep** — for each paradigm executor and offered-load
+   level, a fixed request population is submitted at the target arrival
+   rate and the service's own metrics report per-request latency
+   percentiles, mean batch occupancy, and the modeled energy spend (the
+   ``benchmarks/energy.py`` model applied to batch runtimes).  The shape
+   mirrors queueing intuition: higher offered load raises latency but also
+   occupancy — the micro-batcher converts pressure into coalescing, the
+   amortisation the paper buys with its single big GPU dispatch (Fig. 6).
+
+2. **Lane overlap** — a mixed workload pinned half to ``numpy-mt`` and
+   half to ``pallas-kernel`` runs through the executor pool.  With one
+   queue + worker per paradigm, the lanes execute concurrently: total wall
+   clock should be *less* than the sum of per-lane busy time.  A pool
+   regression (everything serialising behind one lane) shows up as a
+   starved lane or an overlap ratio <= 1.
 
     PYTHONPATH=src python benchmarks/service_throughput.py            # fast
     PYTHONPATH=src python benchmarks/service_throughput.py --full
+    PYTHONPATH=src python benchmarks/service_throughput.py --smoke    # CI
 """
 
 from __future__ import annotations
 
 import argparse
 import shutil
+import sys
 import tempfile
+import time
 from typing import Dict, List
 
 # offered-load levels (requests/s) — low: batches mostly ride the deadline;
 # high: the backlog keeps batches full
 FAST_RATES = (50.0, 400.0)
 FULL_RATES = (25.0, 100.0, 400.0, 1600.0)
+SMOKE_RATES = (400.0,)
 EXECUTORS = ("pallas-kernel", "jax-ref")
 
+OVERLAP_LANES = ("numpy-mt", "pallas-kernel")
 
-def run(fast: bool = True) -> List[Dict]:
+
+def run(fast: bool = True, smoke: bool = False) -> List[Dict]:
     from repro.launch.serve_mine import build_workload, drive
-    from repro.service import ClusteringService
+    from repro.service import ClusteringService, MiningClient
 
-    n_requests = 24 if fast else 96
-    rates = FAST_RATES if fast else FULL_RATES
+    if smoke:
+        n_requests, rates, executors = 8, SMOKE_RATES, ("jax-ref",)
+    else:
+        n_requests = 24 if fast else 96
+        rates = FAST_RATES if fast else FULL_RATES
+        executors = EXECUTORS
     rows: List[Dict] = []
-    for executor in EXECUTORS:
+    for executor in executors:
         # per-executor warm-up workload shares jit compiles across rates
         for rate in rates:
             workdir = tempfile.mkdtemp(prefix="svc_bench_")
             try:
                 service = ClusteringService(
                     workdir, max_batch=8, max_wait_s=0.01, cache_entries=0)
+                client = MiningClient(service=service)
                 workload = build_workload(
                     n_requests, tenants=4, algo="kmeans",
                     features=2, clusters=4, points=16,
                     seed=hash((executor, rate)) % 2**31)
                 with service:
-                    failures = drive(service, workload, rate, executor)
-                snap = service.metrics_snapshot()
+                    failures = drive(client, workload, rate, executor)
+                snap = client.metrics()
                 rows.append(dict(
                     executor=executor,
                     offered_rps=rate,
@@ -67,12 +85,63 @@ def run(fast: bool = True) -> List[Dict]:
     return rows
 
 
+def run_overlap(smoke: bool = False) -> Dict:
+    """Mixed numpy-mt + pallas-kernel load through the executor pool.
+
+    Returns wall clock, per-lane busy seconds, and the overlap ratio
+    (sum of lane busy time / wall).  Ratio > 1 means the lanes genuinely
+    ran concurrently; each lane serving batches is the pool health check.
+    """
+    from repro.launch.serve_mine import build_workload
+    from repro.service import ClusteringService, MiningClient
+
+    n_requests = 8 if smoke else 24
+    points = 24 if smoke else 64
+    workdir = tempfile.mkdtemp(prefix="svc_overlap_")
+    try:
+        service = ClusteringService(
+            workdir, max_batch=2, max_wait_s=0.002, cache_entries=0)
+        client = MiningClient(service=service)
+        workload = build_workload(
+            n_requests, tenants=4, algo="kmeans",
+            features=2, clusters=4, points=points, seed=7)
+        with service:
+            t0 = time.monotonic()
+            handles = [
+                client.submit(tenant, algo, data, params=params,
+                              executor=OVERLAP_LANES[i % len(OVERLAP_LANES)])
+                for i, (tenant, algo, data, params) in enumerate(workload)
+            ]
+            for h in handles:
+                h.result(600)
+            wall = time.monotonic() - t0
+        snap = client.metrics()
+        lanes = {
+            name: st for name, st in snap["lanes"].items() if st["batches"]
+        }
+        busy = sum(st["busy_s"] for st in lanes.values())
+        return {
+            "requests": n_requests,
+            "wall_s": wall,
+            "busy_s": busy,
+            "overlap_ratio": busy / wall if wall > 0 else 0.0,
+            "lanes": {name: {"busy_s": st["busy_s"],
+                             "batches": st["batches"]}
+                      for name, st in lanes.items()},
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI load: one sweep point + lane overlap; "
+                         "exits nonzero if a pool lane is starved")
     args = ap.parse_args()
 
-    rows = run(fast=not args.full)
+    rows = run(fast=not args.full, smoke=args.smoke)
     print("executor,offered_rps,requests,p50_ms,p99_ms,mean_occupancy,"
           "mean_batch_size,batches,modeled_joules,failures")
     for r in rows:
@@ -81,9 +150,26 @@ def main() -> None:
               f"{r['mean_occupancy']:.3f},{r['mean_batch_size']:.2f},"
               f"{r['batches']},{r['modeled_joules']:.3f},{r['failures']}")
     # occupancy should not fall as offered load rises (pressure -> coalesce)
-    for executor in EXECUTORS:
+    for executor in {r["executor"] for r in rows}:
         occ = [r["mean_occupancy"] for r in rows if r["executor"] == executor]
         print(f"# {executor}: occupancy trend {['%.2f' % o for o in occ]}")
+
+    ov = run_overlap(smoke=args.smoke)
+    lane_desc = ", ".join(
+        f"{name}: {st['busy_s']:.3f}s/{st['batches']}b"
+        for name, st in sorted(ov["lanes"].items()))
+    print(f"# overlap: wall {ov['wall_s']:.3f}s vs lane-busy "
+          f"{ov['busy_s']:.3f}s (ratio {ov['overlap_ratio']:.2f}) "
+          f"[{lane_desc}]")
+    starved = [lane for lane in OVERLAP_LANES if lane not in ov["lanes"]]
+    if starved:
+        # pool regression: a pinned lane never executed a batch
+        print(f"# FAIL: starved lanes {starved}", file=sys.stderr)
+        sys.exit(1)
+    if ov["overlap_ratio"] > 1.0:
+        print("# lanes overlapped: wall < sum of per-lane busy time")
+    else:
+        print("# warning: no overlap measured (single-core host?)")
 
 
 if __name__ == "__main__":

@@ -1,26 +1,36 @@
-"""Clustering-as-a-service tour: multi-tenant batching, caching, preemption.
+"""Clustering-as-a-service tour: async client, QoS, lanes, streams, resume.
 
     PYTHONPATH=src python examples/service_demo.py
 
 Walks the full service story on CPU in a few seconds:
-1. two tenants submit mixed DBSCAN/K-Means requests; compatible ones
-   coalesce into padded micro-batches and run through the dispatched
-   paradigm;
+1. two tenants submit mixed DBSCAN/K-Means requests through MiningClient;
+   handles are futures (done()/result()/callbacks), compatible requests
+   coalesce into padded micro-batches, and the executor pool runs
+   numpy-mt and jitted batches on separate lanes concurrently;
 2. a repeated dataset hits the content-hash cache and skips compute;
-3. the service is preempted mid-batch (the paper's activity-suspend), the
+3. a StreamingSession folds an unbounded point stream through mini-batch
+   K-Means, checkpointing per-tenant model state — "killing" the session
+   and reopening it resumes the centroids exactly;
+4. the service is preempted mid-batch (the paper's activity-suspend), the
    in-flight batch checkpoints and parks SUSPENDED, and a *new* service
    instance resumes it to completion — the WorkManager reattach path.
 """
 
 import shutil
 import tempfile
+import time
 
 import jax
 import numpy as np
 
 from repro.core import dbscan
 from repro.data.synthetic import ClusterSpec, make_blobs
-from repro.service import ClusteringService, JobSuspended
+from repro.service import (
+    PRIORITY_INTERACTIVE,
+    ClusteringService,
+    JobSuspended,
+    MiningClient,
+)
 
 workdir = tempfile.mkdtemp(prefix="svc_demo_")
 cfg = dbscan.DBSCANConfig.paper_defaults(2)
@@ -33,18 +43,22 @@ def dataset(seed: int, clusters: int = 4, points: int = 64) -> np.ndarray:
     return np.asarray(x)
 
 
-# -- 1. multi-tenant batched serving ----------------------------------------
-print("== batched multi-tenant serving ==")
-with ClusteringService(workdir, max_batch=4, max_wait_s=0.01) as svc:
+# -- 1. async multi-tenant serving -------------------------------------------
+print("== async multi-tenant serving ==")
+with MiningClient(workdir=workdir, max_batch=4, max_wait_s=0.01) as client:
     handles = []
     for i in range(4):
         tenant = ("alice", "bob")[i % 2]
-        handles.append(svc.submit(
+        handles.append(client.submit(
             tenant, "dbscan", dataset(i), params=dbscan_params))
-    handles.append(svc.submit(
-        "alice", "kmeans", dataset(9), params={"k": 4, "seed": 9}))
+    # an interactive request rides the priority lane past the bulk work
+    handles.append(client.submit(
+        "alice", "kmeans", dataset(9), params={"k": 4, "seed": 9},
+        priority=PRIORITY_INTERACTIVE, ttl=30.0))
+    handles[0].add_done_callback(
+        lambda h: print(f"  (callback) request {h.request_id} done"))
     for h in handles:
-        r = h.wait(120)
+        r = h.result(120)
         desc = (f"{r['n_clusters']} clusters, {r['noise']} noise"
                 if r["algo"] == "dbscan"
                 else f"inertia {r['inertia']:.1f} in {r['iterations']} iters")
@@ -52,24 +66,39 @@ with ClusteringService(workdir, max_batch=4, max_wait_s=0.01) as svc:
               f"[{r['executor']}, {1e3 * (h.latency or 0):.0f}ms]")
 
     # -- 2. content-hash cache ------------------------------------------------
-    repeat = svc.submit("carol", "dbscan", dataset(0), params=dbscan_params)
-    repeat.wait(10)
+    repeat = client.submit("carol", "dbscan", dataset(0),
+                           params=dbscan_params)
+    repeat.result(10)
     print(f"== cache == repeated dataset: hit={repeat.cache_hit} "
           f"({1e3 * (repeat.latency or 0):.2f}ms)")
 
-# -- 3. preempt mid-batch, resume in a fresh process -------------------------
+    # -- 3. streaming session: checkpointed per-tenant model ------------------
+    print("== streaming ==")
+    stream = client.stream("alice", "telemetry", k=3, batch_size=64,
+                           checkpoint_every=1)
+    for i in range(4):
+        stream.push(dataset(20 + i, clusters=3, points=48))
+    snap = stream.snapshot()
+    print(f"  stream step {snap['step']}, {snap['n_seen']} points folded in")
+    del stream   # 'SIGKILL': no close, no flush — the checkpoint survives
+    resumed = client.stream("alice", "telemetry", k=3, batch_size=64)
+    snap2 = resumed.snapshot()
+    print(f"  reopened stream at step {snap2['step']} "
+          f"(centroids intact: {np.allclose(snap['centroids'], snap2['centroids'])})")
+    resumed.close()
+
+# -- 4. preempt mid-batch, resume in a fresh process -------------------------
 print("== preemption ==")
 svc2 = ClusteringService(workdir, max_batch=2, max_wait_s=0.0,
                          checkpoint_every=1).start()
-big = svc2.submit("dave", "dbscan", dataset(33, clusters=8, points=128),
-                  params=dbscan_params, executor="jax-ref")
+client2 = MiningClient(service=svc2)
+big = client2.submit("dave", "dbscan", dataset(33, clusters=8, points=128),
+                     params=dbscan_params, executor="jax-ref")
 # preempt almost immediately: the batch checkpoints and parks SUSPENDED
-import time  # noqa: E402
-
 time.sleep(0.3)
 svc2.stop(preempt=True)
 try:
-    big.wait(1)
+    big.result(1)
     print("  (batch finished before the preemption landed — rerun to race)")
 except JobSuspended as e:
     print(f"  preempted: batch job {e.job_id} SUSPENDED with checkpoint")
@@ -82,8 +111,10 @@ except JobSuspended as e:
 
 print("== metrics ==")
 snap = svc2.metrics_snapshot()
+lanes = {name: f"{st['busy_s']:.2f}s/{st['batches']}b"
+         for name, st in snap["lanes"].items() if st["batches"]}
 print(f"  requests={snap['requests']} batches={snap['batches']} "
-      f"occupancy={snap['mean_occupancy']:.2f} "
+      f"occupancy={snap['mean_occupancy']:.2f} lanes={lanes} "
       f"suspended={snap['suspended_batches']} "
       f"modeled_joules={snap['modeled_joules']:.2f}")
 shutil.rmtree(workdir, ignore_errors=True)

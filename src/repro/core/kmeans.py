@@ -36,6 +36,7 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.cancellation import CancellationToken
 from repro.kernels.distance.ops import assign_clusters
@@ -240,6 +241,85 @@ def fit_cancellable(
     )
 
 
+@dataclasses.dataclass
+class MiniBatchState:
+    """Running mini-batch K-Means model: the whole state of a stream.
+
+    ``centroids`` and per-cluster ``counts`` are the Sculley (2010)
+    accumulator; ``step`` counts applied mini-batches.  The tree form
+    (:meth:`as_tree` / :meth:`from_tree`) is what the service's streaming
+    sessions write through the checkpoint store, so a stream's model
+    survives the process exactly like a suspended batch job does.
+    """
+
+    centroids: jax.Array   # (k, d) f32
+    counts: jax.Array      # (k,) f32 — per-cluster points seen so far
+    step: int = 0          # mini-batches applied
+    n_seen: int = 0        # raw points consumed
+
+    def as_tree(self) -> dict:
+        return {
+            "centroids": np.asarray(self.centroids, np.float32),
+            "counts": np.asarray(self.counts, np.float32),
+            "step": np.int64(self.step),
+            "n_seen": np.int64(self.n_seen),
+        }
+
+    @staticmethod
+    def from_tree(tree: dict) -> "MiniBatchState":
+        return MiniBatchState(
+            centroids=jnp.asarray(tree["centroids"], jnp.float32),
+            counts=jnp.asarray(tree["counts"], jnp.float32),
+            step=int(tree["step"]),
+            n_seen=int(tree["n_seen"]),
+        )
+
+
+def minibatch_init(key: jax.Array, x0: jax.Array,
+                   cfg: KMeansConfig) -> MiniBatchState:
+    """Seed a stream's model from its first ``>= k`` points."""
+    if x0.shape[0] < cfg.k:
+        raise ValueError(
+            f"need at least k={cfg.k} points to initialise, got {x0.shape[0]}")
+    return MiniBatchState(
+        centroids=init_centroids(key, x0, cfg),
+        counts=jnp.zeros((cfg.k,), jnp.float32),
+    )
+
+
+def _minibatch_update(c, counts, xb, cfg: KMeansConfig):
+    """One Sculley step: per-cluster learning rate 1/count."""
+    assign, d2 = _assign(xb, c, cfg)
+    onehot = jax.nn.one_hot(assign, cfg.k, dtype=jnp.float32)
+    bcounts = jnp.sum(onehot, axis=0)
+    bsums = jnp.einsum("nk,nd->kd", onehot, xb.astype(jnp.float32))
+    counts_new = counts + bcounts
+    lr = jnp.where(bcounts > 0, bcounts / jnp.maximum(counts_new, 1.0), 0.0)
+    bmean = bsums / jnp.maximum(bcounts, 1.0)[:, None]
+    c_new = c + lr[:, None] * (bmean - c)
+    return c_new, counts_new, assign, jnp.sum(d2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def minibatch_update_jit(c, counts, xb, cfg: KMeansConfig):
+    """Module-level jitted stream step: one compile per (batch shape, cfg),
+    shared by every streaming session in the process."""
+    return _minibatch_update(c, counts, xb, cfg)
+
+
+def minibatch_step(state: MiniBatchState, xb: jax.Array,
+                   cfg: KMeansConfig) -> MiniBatchState:
+    """Advance a stream's model by one mini-batch (jitted under the hood)."""
+    c, counts, _, _ = minibatch_update_jit(
+        state.centroids, state.counts, jnp.asarray(xb, jnp.float32), cfg)
+    return MiniBatchState(
+        centroids=c,
+        counts=counts,
+        step=state.step + 1,
+        n_seen=state.n_seen + int(xb.shape[0]),
+    )
+
+
 def minibatch_fit(
     key: jax.Array,
     x: jax.Array,
@@ -257,16 +337,8 @@ def minibatch_fit(
         c, counts = carry
         kb = jax.random.fold_in(kloop, i)
         idx = jax.random.randint(kb, (batch_size,), 0, n)
-        xb = x[idx]
-        assign, _ = _assign(xb, c, cfg)
-        onehot = jax.nn.one_hot(assign, cfg.k, dtype=jnp.float32)
-        bcounts = jnp.sum(onehot, axis=0)
-        bsums = jnp.einsum("nk,nd->kd", onehot, xb.astype(jnp.float32))
-        counts_new = counts + bcounts
-        lr = jnp.where(bcounts > 0, bcounts / jnp.maximum(counts_new, 1.0), 0.0)
-        bmean = bsums / jnp.maximum(bcounts, 1.0)[:, None]
-        c = c + lr[:, None] * (bmean - c)
-        return c, counts_new
+        c, counts, _, _ = _minibatch_update(c, counts, x[idx], cfg)
+        return c, counts
 
     c, _ = jax.lax.fori_loop(0, steps, body, (c0, jnp.zeros((cfg.k,))))
     assign, d2 = _assign(x, c, cfg)

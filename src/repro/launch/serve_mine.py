@@ -1,10 +1,14 @@
 """Clustering-as-a-service launcher: drive the batched mining service.
 
 Generates a synthetic multi-tenant workload (the paper's dataset grid as
-request traffic), submits it at an offered rate, and prints the serving
-scorecard — p50/p99 latency, batch occupancy, cache hits, and the modeled
-energy spend per paradigm.  ``--resume`` first completes any batches a
-previous (killed) process left SUSPENDED.
+request traffic), submits it at an offered rate through the async
+:class:`~repro.service.MiningClient`, and prints the serving scorecard —
+p50/p99 latency, batch occupancy, per-lane busy time, cache hits, and the
+modeled energy spend per paradigm.  Backpressure is honoured: when
+admission sheds load with ``BacklogFull``, the driver sleeps the rejected
+request's ``retry_after`` estimate and resubmits instead of hammering the
+door.  ``--resume`` first completes any batches a previous (killed)
+process left SUSPENDED.
 
     PYTHONPATH=src python -m repro.launch.serve_mine --workdir /tmp/svc \
         --requests 32 --tenants 4 --rate 100 --algo mixed --executor auto
@@ -23,7 +27,14 @@ from repro.core import dbscan
 from repro.data.synthetic import ClusterSpec, make_blobs
 from repro.runtime import backend as backend_mod
 from repro.runtime.preemption import PreemptionGuard
-from repro.service import ClusteringService, JobSuspended
+from repro.service import (
+    BacklogFull,
+    ClusteringService,
+    JobSuspended,
+    MiningClient,
+)
+
+MAX_RESUBMITS = 3
 
 
 def build_workload(n_requests: int, tenants: int, algo: str, *,
@@ -45,26 +56,45 @@ def build_workload(n_requests: int, tenants: int, algo: str, *,
     return out
 
 
-def drive(service: ClusteringService, workload, rate: float,
-          executor: str | None, timeout: float = 300.0) -> dict:
+def submit_with_backoff(client: MiningClient, tenant, algo, data, *,
+                        params, executor=None, ttl=None):
+    """Submit one request, honouring BacklogFull.retry_after on rejection."""
+    for attempt in range(MAX_RESUBMITS):
+        try:
+            return client.submit(tenant, algo, data, params=params,
+                                 executor=executor, ttl=ttl)
+        except BacklogFull as e:
+            if attempt + 1 == MAX_RESUBMITS:
+                break              # shedding anyway; don't sleep for it
+            time.sleep(e.retry_after)
+    return None   # shed after MAX_RESUBMITS rejects
+
+
+def drive(client: MiningClient, workload, rate: float,
+          executor: str | None, timeout: float = 300.0,
+          ttl: float | None = None) -> dict:
     """Submit at the offered rate; wait for every handle; count failures."""
     handles = []
     gap = 1.0 / rate if rate > 0 else 0.0
+    failures = {"suspended": 0, "dropped": 0, "rejected": 0}
     t0 = time.time()
     for i, (tenant, algo, data, params) in enumerate(workload):
         target = t0 + i * gap
         delay = target - time.time()
         if delay > 0:
             time.sleep(delay)
-        handles.append(service.submit(
-            tenant, algo, data, params=params, executor=executor))
-    failures = {"suspended": 0, "dropped": 0}
+        h = submit_with_backoff(client, tenant, algo, data, params=params,
+                                executor=executor, ttl=ttl)
+        if h is None:
+            failures["rejected"] += 1
+        else:
+            handles.append(h)
     for h in handles:
         try:
-            h.wait(timeout)
+            h.result(timeout)
         except JobSuspended:
             failures["suspended"] += 1
-        except Exception:
+        except Exception:            # RequestDropped, deadline expiry, ...
             failures["dropped"] += 1
     return failures
 
@@ -87,6 +117,8 @@ def main() -> None:
                     help="points per cluster per request")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--ttl", type=float, default=None,
+                    help="per-request deadline, seconds from submit")
     ap.add_argument("--resume", action="store_true",
                     help="complete SUSPENDED batches from a previous run")
     args = ap.parse_args()
@@ -97,8 +129,9 @@ def main() -> None:
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1000.0,
     )
+    client = MiningClient(service=service)
     if args.resume:
-        outcomes = service.resume_suspended()
+        outcomes = client.resume_suspended()
         for o in outcomes:
             print(f"resumed job {o.job_id}: {o.algo} x{o.size} "
                   f"on {o.executor} in {o.exec_s:.3f}s")
@@ -109,17 +142,19 @@ def main() -> None:
         args.requests, args.tenants, args.algo,
         features=args.features, clusters=args.clusters, points=args.points)
     executor = None if args.executor == "auto" else args.executor
-    # SIGTERM/SIGINT -> cooperative preemption: the in-flight batch
-    # checkpoints and parks SUSPENDED (finish later with --resume)
+    # SIGTERM/SIGINT -> cooperative preemption: in-flight batches
+    # checkpoint and park SUSPENDED (finish later with --resume)
     with PreemptionGuard(service.token), service:
-        failures = drive(service, workload, args.rate, executor)
-    snap = service.metrics_snapshot()
+        failures = drive(client, workload, args.rate, executor, ttl=args.ttl)
+    snap = client.metrics()
     print(json.dumps(snap, indent=2, default=str))
+    lanes = {name: f"{st['busy_s']:.3f}s/{st['batches']}b"
+             for name, st in snap["lanes"].items() if st["batches"]}
     print(f"# {snap['requests']} requests, "
           f"p50 {snap['p50_latency_s'] * 1e3:.1f}ms / "
           f"p99 {snap['p99_latency_s'] * 1e3:.1f}ms, "
           f"occupancy {snap['mean_occupancy']:.2f}, "
-          f"failures {failures}")
+          f"lanes {lanes}, failures {failures}")
 
 
 if __name__ == "__main__":

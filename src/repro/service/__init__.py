@@ -1,25 +1,32 @@
 """Clustering-as-a-service: batched multi-tenant mining on the paper's cores.
 
 The paper ships a single-activity app that submits one mining job at a time
-to WorkManager.  This subsystem is that app generalised to a service front
-door: many tenants submit DBSCAN/K-Means requests, an admission queue keeps
-them fair and bounded, a micro-batcher coalesces compatible requests into
-padded batches, a paradigm registry picks the execution backend per batch
-(the paper's GPU-vs-CPU comparison as a runtime dispatch decision), and a
-preemption-safe executor runs each batch as a durable job that survives
-being killed at any moment.
+to WorkManager.  This subsystem is that app generalised to an async service
+front door: many tenants submit DBSCAN/K-Means requests through a
+:class:`MiningClient` and get futures back, an admission queue keeps them
+fair, bounded, and deadline-aware across priority lanes, a micro-batcher
+coalesces compatible requests into padded batches, a dispatcher assigns
+each batch to the least-loaded compatible executor lane (one queue + worker
+per paradigm — the paper's GPU-vs-CPU comparison as a runtime dispatch
+decision, now genuinely concurrent), and a preemption-safe executor runs
+each batch as a durable job that survives being killed at any moment.
+Unbounded point streams ride :class:`StreamingSession` — mini-batch K-Means
+with per-tenant model state in the checkpoint store.
 
-    queue     — admission control: per-tenant fairness, bounded backlog
+    client    — MiningClient + ResultHandle: the async front door
+    session   — StreamingSession: checkpointed per-tenant streams
+    queue     — admission control: priority lanes, deadlines, fairness
     batcher   — micro-batching: coalesce + pad + max-wait deadline
     dispatch  — paradigm registry + cost model (pallas-kernel/jax-ref/numpy-mt)
     executor  — durable batch execution: jobs + checkpoints + resume
     cache     — content-hash result cache
     metrics   — latency percentiles, batch occupancy, energy proxy
-    service   — the facade tying it together
+    service   — the engine tying it together (executor lane pool)
 """
 
 from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
 from repro.service.cache import ResultCache, content_key
+from repro.service.client import MiningClient, ResultHandle
 from repro.service.dispatch import (
     EXECUTOR_JAX_REF,
     EXECUTOR_NUMPY_MT,
@@ -30,13 +37,18 @@ from repro.service.dispatch import (
 from repro.service.executor import BatchExecutor, BatchOutcome
 from repro.service.metrics import ServiceMetrics
 from repro.service.queue import (
+    PRIORITY_BATCH,
+    PRIORITY_INTERACTIVE,
+    PRIORITY_NORMAL,
     AdmissionQueue,
     BacklogFull,
     JobSuspended,
     MiningRequest,
+    RequestCancelled,
     RequestDropped,
 )
-from repro.service.service import ClusteringService
+from repro.service.service import ClusteringService, ExecutorLane
+from repro.service.session import StreamingSession
 
 __all__ = [
     "AdmissionQueue",
@@ -48,14 +60,22 @@ __all__ = [
     "EXECUTOR_JAX_REF",
     "EXECUTOR_NUMPY_MT",
     "EXECUTOR_PALLAS",
+    "ExecutorLane",
     "JobSuspended",
     "MicroBatch",
     "MicroBatcher",
+    "MiningClient",
     "MiningRequest",
+    "PRIORITY_BATCH",
+    "PRIORITY_INTERACTIVE",
+    "PRIORITY_NORMAL",
     "ParadigmRegistry",
+    "RequestCancelled",
     "RequestDropped",
     "ResultCache",
+    "ResultHandle",
     "ServiceMetrics",
+    "StreamingSession",
     "content_key",
     "default_registry",
 ]

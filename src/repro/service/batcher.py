@@ -20,7 +20,12 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
-from repro.service.queue import AdmissionQueue, MiningRequest, canonical_params
+from repro.service.queue import (
+    AdmissionQueue,
+    MiningRequest,
+    RequestDropped,
+    canonical_params,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +88,11 @@ class MicroBatch:
         """Shared padded point-count bucket for every item."""
         return bucket_points(max(r.n_points for r in self.requests))
 
+    @property
+    def priority(self) -> int:
+        """The batch rides at its most urgent member's priority."""
+        return min(r.priority for r in self.requests)
+
 
 class MicroBatcher:
     """Stages drained requests per key and flushes full or ripe groups."""
@@ -104,43 +114,99 @@ class MicroBatcher:
         with self._lock:
             return sum(len(v) for v in self._staged.values())
 
-    def _form(self, key: BatchKey, now: float) -> MicroBatch:
+    def _form(self, key: BatchKey, now: float) -> Optional[MicroBatch]:
         group = self._staged[key]
-        take, rest = group[: self.max_batch], group[self.max_batch:]
+        take: List[MiningRequest] = []
+        idx = 0
+        while idx < len(group) and len(take) < self.max_batch:
+            r = group[idx]
+            idx += 1
+            # atomic claim: a concurrent cancel() either beats the claim
+            # (request dropped here) or loses (cancel() returns False)
+            if r.claim_for_batch(now):
+                take.append(r)
+        rest = group[idx:]
         if rest:
             self._staged[key] = rest
         else:
             del self._staged[key]
-        for r in take:
-            r.batched = now
+        if not take:
+            return None
         return MicroBatch(key=key, requests=take, capacity=self.max_batch)
+
+    def _prune(self, now: float) -> List[MiningRequest]:
+        """Drop cancelled/expired requests from the staged groups so they
+        never occupy a batch slot; returns the newly-expired ones (failed
+        by the caller, outside the lock)."""
+        dead: List[MiningRequest] = []
+        for key in list(self._staged.keys()):
+            live: List[MiningRequest] = []
+            for r in self._staged[key]:
+                if r.done():           # cancelled while staged
+                    continue
+                if r.expired(now):
+                    dead.append(r)
+                    continue
+                live.append(r)
+            if live:
+                self._staged[key] = live
+            else:
+                del self._staged[key]
+        return dead
+
+    def _stage(self, drained: List[MiningRequest]) -> None:
+        for req in drained:
+            self._staged.setdefault(
+                BatchKey.for_request(req), []).append(req)
+
+    def _keys_by_priority(self) -> List[BatchKey]:
+        """Staged groups ordered most-urgent-first, so priority carries
+        through the staging layer, not just the admission queue."""
+        return sorted(
+            self._staged.keys(),
+            key=lambda k: min(r.priority for r in self._staged[k]))
+
+    @staticmethod
+    def _fail_expired(dead: List[MiningRequest]) -> None:
+        for r in dead:
+            r.fail(RequestDropped(
+                f"request {r.request_id} missed its deadline while staged "
+                f"for batching; never dispatched"))
 
     def poll(self, now: Optional[float] = None) -> List[MicroBatch]:
         """Drain the admission queue, then flush every full or ripe group."""
         now = time.time() if now is None else now
         batches: List[MicroBatch] = []
+        # drain outside the batcher lock: expired requests fail inside
+        # drain(), and completion callbacks must never run under our lock
+        drained = self.queue.drain(now=now)
         with self._lock:
-            for req in self.queue.drain():
-                self._staged.setdefault(
-                    BatchKey.for_request(req), []).append(req)
-            for key in list(self._staged.keys()):
+            self._stage(drained)
+            dead = self._prune(now)
+            for key in self._keys_by_priority():
                 while key in self._staged and (
                     len(self._staged[key]) >= self.max_batch
                     or now - min(r.submitted for r in self._staged[key])
                     >= self.max_wait_s
                 ):
-                    batches.append(self._form(key, now))
+                    batch = self._form(key, now)
+                    if batch is not None:
+                        batches.append(batch)
+        self._fail_expired(dead)
         return batches
 
     def flush_all(self, now: Optional[float] = None) -> List[MicroBatch]:
         """Emit everything staged regardless of deadline (shutdown drain)."""
         now = time.time() if now is None else now
         batches: List[MicroBatch] = []
+        drained = self.queue.drain(now=now)
         with self._lock:
-            for req in self.queue.drain():
-                self._staged.setdefault(
-                    BatchKey.for_request(req), []).append(req)
-            for key in list(self._staged.keys()):
+            self._stage(drained)
+            dead = self._prune(now)
+            for key in self._keys_by_priority():
                 while key in self._staged:
-                    batches.append(self._form(key, now))
+                    batch = self._form(key, now)
+                    if batch is not None:
+                        batches.append(batch)
+        self._fail_expired(dead)
         return batches

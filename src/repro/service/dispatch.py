@@ -355,13 +355,37 @@ class ParadigmRegistry:
         explicit: Optional[str] = None,
     ) -> str:
         """Cost-model dispatch (explicit override wins, and is validated)."""
+        return self.candidates(algo, n, d, batch_size, params,
+                               explicit=explicit)[0]
+
+    def candidates(
+        self,
+        algo: str,
+        n: int,
+        d: int,
+        batch_size: int,
+        params: Dict[str, Any],
+        explicit: Optional[str] = None,
+    ) -> List[str]:
+        """Compatible executors in cost-model preference order.
+
+        The first entry is what :meth:`select` returns; the rest are lanes
+        the executor pool may spill to when the preferred lane is loaded
+        (e.g. both jitted paradigms can take large batches — the pool picks
+        the least-loaded of them).  An explicit override is a single-entry
+        list: a pinned request never rides another lane.
+        """
         if explicit is not None:
             self.get(explicit)
-            return explicit
+            return [explicit]
         if estimate_work(algo, n, d, batch_size, params) < SMALL_WORK_THRESHOLD:
-            return EXECUTOR_NUMPY_MT
+            return [name for name in (EXECUTOR_NUMPY_MT,)
+                    if name in self._paradigms] or self.names()
         backend = backend_mod.discover_backend()
-        return EXECUTOR_PALLAS if backend.is_tpu else EXECUTOR_JAX_REF
+        accel = ([EXECUTOR_PALLAS, EXECUTOR_JAX_REF] if backend.is_tpu
+                 else [EXECUTOR_JAX_REF, EXECUTOR_PALLAS])
+        out = [name for name in accel if name in self._paradigms]
+        return out or self.names()
 
 
 def default_registry() -> ParadigmRegistry:

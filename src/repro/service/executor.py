@@ -105,18 +105,26 @@ class BatchExecutor:
         batch: MicroBatch,
         token: Optional[CancellationToken] = None,
         progress_hook=None,
+        executor: Optional[str] = None,
     ) -> BatchOutcome:
-        """Execute a fresh micro-batch (enqueue -> claim -> run)."""
+        """Execute a fresh micro-batch (enqueue -> claim -> run).
+
+        ``executor`` pins the paradigm (the lane pool has already chosen
+        one); without it the registry's cost model selects as before.
+        """
         key = batch.key
         params = key.params_dict
-        executor = self.registry.select(
-            key.algo,
-            n=max(r.n_points for r in batch.requests),
-            d=key.features,
-            batch_size=batch.size,
-            params=params,
-            explicit=key.executor,
-        )
+        if executor is not None:
+            self.registry.get(executor)   # validate the pinned lane
+        else:
+            executor = self.registry.select(
+                key.algo,
+                n=max(r.n_points for r in batch.requests),
+                d=key.features,
+                batch_size=batch.size,
+                params=params,
+                explicit=key.executor,
+            )
         n_max, d = batch.n_max, key.features
         size = batch.size
         eps = float(params.get("eps", 1.0))

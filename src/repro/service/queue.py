@@ -1,11 +1,20 @@
-"""Admission queue — per-tenant fairness with a bounded backlog.
+"""Admission queue — priority lanes, deadlines, per-tenant fairness.
 
-The service front door.  Requests land in per-tenant FIFOs and are drained
-round-robin, so one chatty tenant cannot starve the rest (the paper's
-single-user activity generalised to many users).  Backlog bounds are
-enforced at admission: a full queue rejects with :class:`BacklogFull`
-instead of buffering unboundedly — load shedding happens at the door, not
-by OOM in the batcher.
+The service front door.  Requests land in per-tenant FIFOs inside priority
+lanes and are drained strict-priority-first, round-robin within a lane, so
+small interactive requests overtake bulk work and one chatty tenant cannot
+starve the rest (the paper's single-user activity generalised to many
+users).  Backlog bounds are enforced at admission: a full queue rejects
+with :class:`BacklogFull` — now carrying the tenant, the observed depth,
+and a ``retry_after`` estimate derived from the recent drain rate — instead
+of buffering unboundedly; load shedding happens at the door, not by OOM in
+the batcher.
+
+Per-request QoS: ``priority`` picks the lane, ``deadline``/``ttl`` bound
+how long a request may wait.  A request whose deadline passes while it is
+still queued is failed with :class:`RequestDropped` at drain time and never
+occupies a batch slot; a request cancelled through its handle is likewise
+skipped.
 
 Durability note: the admission queue is in-memory.  A request becomes
 durable the moment the executor forms its batch job and writes the step-0
@@ -18,12 +27,15 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import logging
 import threading
 import time
 from collections import OrderedDict, deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import numpy as np
+
+logger = logging.getLogger(__name__)
 
 ALGORITHMS = ("dbscan", "kmeans")
 
@@ -31,13 +43,38 @@ ALGORITHMS = ("dbscan", "kmeans")
 # item inside a batch rather than in its key).
 PER_ITEM_PARAMS = ("seed",)
 
+# Priority lanes, drained strict-priority-first (lower value = sooner).
+PRIORITY_INTERACTIVE = 0
+PRIORITY_NORMAL = 1
+PRIORITY_BATCH = 2
+
 
 class BacklogFull(RuntimeError):
-    """Admission rejected: global or per-tenant backlog bound hit."""
+    """Admission rejected: global or per-tenant backlog bound hit.
+
+    Structured so clients can back off instead of parsing a message:
+    ``tenant`` (None when the *global* bound tripped), ``depth`` (the
+    backlog that was full), ``limit`` (its bound), and ``retry_after``
+    (seconds; estimated from the queue's recent drain rate).
+    """
+
+    def __init__(self, message: str, *, tenant: Optional[str] = None,
+                 depth: int = 0, limit: int = 0,
+                 retry_after: float = 0.1) -> None:
+        super().__init__(message)
+        self.tenant = tenant
+        self.depth = depth
+        self.limit = limit
+        self.retry_after = retry_after
 
 
 class RequestDropped(RuntimeError):
-    """The service stopped before this request was batched; resubmit."""
+    """The request never reached dispatch: the service stopped, or the
+    request's deadline expired while it was still queued; resubmit."""
+
+
+class RequestCancelled(RuntimeError):
+    """The request was cancelled through its handle before dispatch."""
 
 
 class JobSuspended(RuntimeError):
@@ -70,6 +107,8 @@ class MiningRequest:
     data: np.ndarray               # (n, d) float32
     params: Dict[str, Any]         # eps/min_pts or k (+ optional seed, ...)
     executor: Optional[str] = None  # explicit paradigm override
+    priority: int = PRIORITY_NORMAL
+    deadline: Optional[float] = None   # absolute epoch seconds; None = never
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     submitted: float = dataclasses.field(default_factory=time.time)
@@ -86,6 +125,11 @@ class MiningRequest:
         default=None, repr=False)
     _error: Optional[BaseException] = dataclasses.field(
         default=None, repr=False)
+    _callbacks: List[Callable[["MiningRequest"], None]] = dataclasses.field(
+        default_factory=list, repr=False)
+    _state_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+    _cancel_requested: bool = dataclasses.field(default=False, repr=False)
 
     @property
     def n_points(self) -> int:
@@ -95,17 +139,76 @@ class MiningRequest:
     def features(self) -> int:
         return int(self.data.shape[1])
 
+    # -- QoS -----------------------------------------------------------------
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self.deadline is None:
+            return False
+        return (time.time() if now is None else now) >= self.deadline
+
     # -- completion handle ---------------------------------------------------
 
+    def _complete(self, *, result: Optional[Dict[str, Any]] = None,
+                  error: Optional[BaseException] = None) -> bool:
+        """First completion wins; callbacks run outside the state lock and
+        a raising callback cannot strand the other requests of a batch."""
+        with self._state_lock:
+            if self._done.is_set():
+                return False
+            self._result = result
+            self._error = error
+            self.completed = time.time()
+            callbacks, self._callbacks = self._callbacks, []
+            self._done.set()
+        for fn in callbacks:
+            self._run_callback(fn)
+        return True
+
+    def _run_callback(self, fn: Callable[["MiningRequest"], None]) -> None:
+        try:
+            fn(self)
+        except Exception:
+            logger.exception("request %d done-callback raised",
+                             self.request_id)
+
     def resolve(self, result: Dict[str, Any]) -> None:
-        self._result = result
-        self.completed = time.time()
-        self._done.set()
+        self._complete(result=result)
 
     def fail(self, error: BaseException) -> None:
-        self._error = error
-        self.completed = time.time()
-        self._done.set()
+        self._complete(error=error)
+
+    def claim_for_batch(self, now: float) -> bool:
+        """Atomically claim the request for a forming batch; loses to a
+        concurrent :meth:`cancel` (the loser drops the request)."""
+        with self._state_lock:
+            if self._done.is_set() or self._cancel_requested:
+                return False
+            self.batched = now
+            return True
+
+    def cancel(self) -> bool:
+        """Best-effort cancel: succeeds only before the batcher claims the
+        request (a batched request is already riding a durable job)."""
+        with self._state_lock:
+            if self.batched or self._done.is_set() or self._cancel_requested:
+                return False
+            self._cancel_requested = True
+        self.fail(RequestCancelled(
+            f"request {self.request_id} cancelled before dispatch"))
+        return True
+
+    def add_done_callback(self, fn: Callable[["MiningRequest"], None]) -> None:
+        """Run ``fn(request)`` on completion (immediately if already done).
+
+        Callbacks fire on the thread that completes the request; keep them
+        short and never block on the service from inside one.  A raising
+        callback is logged and isolated, never propagated.
+        """
+        with self._state_lock:
+            if not self._done.is_set():
+                self._callbacks.append(fn)
+                return
+        self._run_callback(fn)
 
     def wait(self, timeout: Optional[float] = None) -> Dict[str, Any]:
         if not self._done.wait(timeout):
@@ -115,6 +218,13 @@ class MiningRequest:
             raise self._error
         assert self._result is not None
         return self._result
+
+    def exception(self,
+                  timeout: Optional[float] = None) -> Optional[BaseException]:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} not complete after {timeout}s")
+        return self._error
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -156,67 +266,142 @@ def validate_request(req: MiningRequest) -> None:
 
 
 class AdmissionQueue:
-    """Bounded, tenant-fair FIFO-of-FIFOs (thread-safe)."""
+    """Bounded, priority-laned, tenant-fair FIFO-of-FIFOs (thread-safe)."""
 
     def __init__(self, max_backlog: int = 256,
                  max_per_tenant: int = 64) -> None:
         self.max_backlog = max_backlog
         self.max_per_tenant = max_per_tenant
         self._lock = threading.Lock()
-        # OrderedDict keeps a stable tenant rotation order (insertion order,
-        # rotated on every drain so no tenant is permanently first).
-        self._tenants: "OrderedDict[str, Deque[MiningRequest]]" = OrderedDict()
+        # priority -> (OrderedDict keeps a stable tenant rotation order:
+        # insertion order, rotated on every drain so no tenant is
+        # permanently first within its lane).
+        self._lanes: Dict[int, "OrderedDict[str, Deque[MiningRequest]]"] = {}
+        self._tenant_depth: Dict[str, int] = {}
         self._depth = 0
         self.rejected = 0
+        self.expired = 0
+        # drain-rate EWMA feeding the retry_after estimate
+        self._drained_at: Optional[float] = None
+        self._drain_rate: float = 0.0      # requests/s, 0 = unknown yet
+
+    # -- retry_after ---------------------------------------------------------
+
+    def _retry_after(self, depth: int) -> float:
+        """Seconds until ``depth`` requests likely drained, from the EWMA
+        drain rate; bounded so clients neither spin nor stall."""
+        if self._drain_rate > 0:
+            est = depth / self._drain_rate
+        else:
+            est = 0.1
+        return float(min(5.0, max(0.01, est)))
+
+    def _note_drained(self, count: int, now: float) -> None:
+        if count <= 0:
+            return
+        if self._drained_at is not None:
+            dt = max(1e-6, now - self._drained_at)
+            inst = count / dt
+            self._drain_rate = (0.8 * self._drain_rate + 0.2 * inst
+                                if self._drain_rate > 0 else inst)
+        self._drained_at = now
+
+    # -- admission -----------------------------------------------------------
 
     def submit(self, req: MiningRequest) -> None:
         validate_request(req)
         with self._lock:
-            pending = self._tenants.get(req.tenant)
-            tenant_depth = len(pending) if pending is not None else 0
+            tenant_depth = self._tenant_depth.get(req.tenant, 0)
             if self._depth >= self.max_backlog:
                 self.rejected += 1
                 raise BacklogFull(
-                    f"global backlog full ({self.max_backlog}); shed load")
+                    f"global backlog full ({self.max_backlog}); retry later",
+                    tenant=None, depth=self._depth, limit=self.max_backlog,
+                    retry_after=self._retry_after(self._depth))
             if tenant_depth >= self.max_per_tenant:
                 self.rejected += 1
                 raise BacklogFull(
                     f"tenant {req.tenant!r} backlog full "
-                    f"({self.max_per_tenant}); shed load")
+                    f"({self.max_per_tenant}); retry later",
+                    tenant=req.tenant, depth=tenant_depth,
+                    limit=self.max_per_tenant,
+                    retry_after=self._retry_after(tenant_depth))
+            lane = self._lanes.setdefault(req.priority, OrderedDict())
+            pending = lane.get(req.tenant)
             if pending is None:
                 pending = deque()
-                self._tenants[req.tenant] = pending
+                lane[req.tenant] = pending
             pending.append(req)
+            self._tenant_depth[req.tenant] = tenant_depth + 1
             self._depth += 1
 
-    def drain(self, limit: Optional[int] = None) -> List[MiningRequest]:
-        """Pull up to ``limit`` requests, one per tenant per rotation."""
+    # -- drain ---------------------------------------------------------------
+
+    def _pop_tenant(self, lane: "OrderedDict[str, Deque[MiningRequest]]",
+                    tenant: str) -> MiningRequest:
+        q = lane[tenant]
+        req = q.popleft()
+        self._depth -= 1
+        left = self._tenant_depth.get(tenant, 1) - 1
+        if left <= 0:
+            self._tenant_depth.pop(tenant, None)
+        else:
+            self._tenant_depth[tenant] = left
+        if not q:
+            del lane[tenant]
+        return req
+
+    def drain(self, limit: Optional[int] = None,
+              now: Optional[float] = None) -> List[MiningRequest]:
+        """Pull up to ``limit`` live requests, strict priority order, one per
+        tenant per rotation within a lane.
+
+        Requests whose deadline has passed are dropped here — failed with
+        :class:`RequestDropped` and never handed to the batcher — and
+        already-completed (cancelled) requests are silently discarded.
+        """
+        now = time.time() if now is None else now
         out: List[MiningRequest] = []
+        dead: List[MiningRequest] = []
         with self._lock:
-            while self._depth and (limit is None or len(out) < limit):
-                for tenant in list(self._tenants.keys()):
-                    q = self._tenants[tenant]
-                    if q:
-                        out.append(q.popleft())
-                        self._depth -= 1
-                    if not q:
-                        del self._tenants[tenant]
-                    if limit is not None and len(out) >= limit:
-                        break
-                else:
-                    # full rotation: move the first tenant to the back so
-                    # the next drain starts one position later
-                    if len(self._tenants) > 1:
-                        first, q = next(iter(self._tenants.items()))
-                        del self._tenants[first]
-                        self._tenants[first] = q
+            for priority in sorted(self._lanes):
+                lane = self._lanes[priority]
+                while lane and (limit is None or len(out) < limit):
+                    for tenant in list(lane.keys()):
+                        if tenant not in lane:
+                            continue
+                        req = self._pop_tenant(lane, tenant)
+                        if req.done():            # cancelled while queued
+                            continue
+                        if req.expired(now):
+                            self.expired += 1
+                            dead.append(req)
+                            continue
+                        out.append(req)
+                        if limit is not None and len(out) >= limit:
+                            break
+                    else:
+                        # full rotation: move the first tenant to the back so
+                        # the next drain starts one position later
+                        if len(lane) > 1:
+                            first, q = next(iter(lane.items()))
+                            del lane[first]
+                            lane[first] = q
+                        continue
+                    break
+            self._note_drained(len(out) + len(dead), now)
+        # fail expired requests outside the lock: completion callbacks are
+        # user code and must not run under the queue lock
+        for req in dead:
+            req.fail(RequestDropped(
+                f"request {req.request_id} missed its deadline "
+                f"({req.deadline:.3f}) while queued; never dispatched"))
         return out
 
     def depth(self, tenant: Optional[str] = None) -> int:
         with self._lock:
             if tenant is not None:
-                q = self._tenants.get(tenant)
-                return len(q) if q is not None else 0
+                return self._tenant_depth.get(tenant, 0)
             return self._depth
 
     def __len__(self) -> int:

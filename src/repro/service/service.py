@@ -1,18 +1,31 @@
-"""The clustering service facade: submit -> batch -> dispatch -> execute.
+"""The clustering service engine: submit -> batch -> dispatch -> execute.
 
-One worker thread drives the pipeline: the micro-batcher drains the
-admission queue and emits ready batches; each batch runs through the
-paradigm executor as a durable job.  The cache is consulted at submit time
-(hits never enter the queue).  ``stop(preempt=True)`` is the activity-
-suspend path: the shared token cancels, the in-flight batch checkpoints
-and parks SUSPENDED, and a later process picks it up with
-:meth:`ClusteringService.resume_suspended`.
+Two kinds of threads drive the pipeline.  A *dispatcher* drains the
+admission queue through the micro-batcher and assigns each formed batch to
+an executor *lane* — one queue + worker per registered paradigm — picking
+the least-loaded lane among the cost model's compatible candidates.  Lanes
+run independently, so a numpy-mt batch genuinely overlaps a pallas-kernel
+batch instead of serialising behind one loop.  The cache is consulted at
+submit time (hits never enter the queue).  ``stop(preempt=True)`` is the
+activity-suspend path: the shared token cancels, in-flight batches
+checkpoint and park SUSPENDED, and a later process picks them up with
+:meth:`ClusteringService.resume_suspended`.  Any ``stop()`` — graceful or
+preempting — fails every still-pending request handle, so a caller blocked
+in ``wait()`` never hangs past shutdown.
+
+Most callers should not use this class directly: the front door is
+:class:`repro.service.client.MiningClient` (futures, QoS, streaming
+sessions).  :meth:`ClusteringService.submit` survives as a deprecated shim
+over the same path.
 """
 
 from __future__ import annotations
 
+import itertools
+import queue as _queue
 import threading
 import time
+import warnings
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -20,15 +33,81 @@ import numpy as np
 from repro.core.cancellation import CancellationToken, CancelReason
 from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
 from repro.service.cache import ResultCache, content_key
-from repro.service.dispatch import ParadigmRegistry, default_registry
+from repro.service.dispatch import (
+    ParadigmRegistry,
+    default_registry,
+    estimate_work,
+)
 from repro.service.executor import BatchExecutor, BatchOutcome
 from repro.service.metrics import ServiceMetrics
 from repro.service.queue import (
+    PRIORITY_NORMAL,
     AdmissionQueue,
     JobSuspended,
     MiningRequest,
     RequestDropped,
 )
+
+
+class ExecutorLane:
+    """One paradigm's private batch queue + worker thread + load account.
+
+    The queue is priority-ordered (FIFO within a priority), so an
+    interactive batch overtakes bulk batches already staged on the lane —
+    admission-queue priority carries all the way to execution.  ``load``
+    is the work-estimate sum of queued plus in-flight batches — the
+    quantity the dispatcher minimises when the cost model offers more
+    than one compatible lane.  ``busy_s`` accumulates wall-clock
+    execution time, which is what the overlap benchmark compares against
+    total wall time to show lanes genuinely run concurrently.
+    """
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        # entries: (priority, seq, batch, est); the shutdown sentinel rides
+        # at +inf priority so every real batch drains before the worker exits
+        self.batches: "_queue.PriorityQueue[tuple]" = _queue.PriorityQueue()
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+        self.queued_work = 0.0
+        self.inflight_work = 0.0
+        self.busy_s = 0.0
+        self.batches_run = 0
+        self.thread: Optional[threading.Thread] = None
+
+    @property
+    def load(self) -> float:
+        with self._lock:
+            return self.queued_work + self.inflight_work
+
+    def put(self, batch: MicroBatch, est: float) -> None:
+        with self._lock:
+            self.queued_work += est
+        self.batches.put((batch.priority, next(self._seq), batch, est))
+
+    def put_sentinel(self) -> None:
+        self.batches.put((float("inf"), next(self._seq), None, 0.0))
+
+    def begin(self, est: float) -> None:
+        with self._lock:
+            self.queued_work -= est
+            self.inflight_work += est
+
+    def finish(self, est: float, exec_s: float, ran: bool) -> None:
+        with self._lock:
+            self.inflight_work -= est
+            if ran:
+                self.busy_s += exec_s
+                self.batches_run += 1
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "busy_s": self.busy_s,
+                "batches": self.batches_run,
+                "queued_work": self.queued_work,
+                "inflight_work": self.inflight_work,
+            }
 
 
 class ClusteringService:
@@ -46,6 +125,7 @@ class ClusteringService:
         checkpoint_every: int = 8,
         poll_interval: float = 0.002,
     ) -> None:
+        self.workdir = workdir
         self.queue = AdmissionQueue(max_backlog=max_backlog,
                                     max_per_tenant=max_per_tenant)
         self.batcher = MicroBatcher(self.queue, max_batch=max_batch,
@@ -56,15 +136,17 @@ class ClusteringService:
             heartbeat_timeout=heartbeat_timeout,
             checkpoint_every=checkpoint_every,
         )
+        self.registry = self.executor.registry
         self.cache = ResultCache(max_entries=cache_entries)
         self.metrics = ServiceMetrics()
         self.token = CancellationToken()
         self.poll_interval = poll_interval
+        self.lanes: Dict[str, ExecutorLane] = {}
         self._inflight: Dict[int, MiningRequest] = {}  # request_id -> req
         self._lock = threading.Lock()
         self._running = False
         self._stopped = False
-        self._worker: Optional[threading.Thread] = None
+        self._dispatcher: Optional[threading.Thread] = None
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -74,9 +156,17 @@ class ClusteringService:
         self.token.reset()
         self._running = True
         self._stopped = False
-        self._worker = threading.Thread(target=self._loop, daemon=True,
-                                        name="clustering-service")
-        self._worker.start()
+        self.lanes = {name: ExecutorLane(name)
+                      for name in self.registry.names()}
+        for lane in self.lanes.values():
+            lane.thread = threading.Thread(
+                target=self._lane_loop, args=(lane,), daemon=True,
+                name=f"clustering-lane-{lane.name}")
+            lane.thread.start()
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, daemon=True,
+            name="clustering-dispatch")
+        self._dispatcher.start()
         return self
 
     def __enter__(self) -> "ClusteringService":
@@ -87,18 +177,26 @@ class ClusteringService:
 
     def stop(self, preempt: bool = False, timeout: float = 30.0) -> None:
         """Graceful stop drains everything staged; ``preempt=True`` is the
-        OS-suspend path — the in-flight batch checkpoints and SUSPENDs."""
+        OS-suspend path — in-flight batches checkpoint and SUSPEND.  Either
+        way, every request handle still pending when the threads are gone is
+        failed, so no caller blocked in ``wait()`` outlives the service."""
         if preempt:
             self.token.cancel(CancelReason.PREEMPTION)
         self._running = False
         with self._lock:
             self._stopped = True
-        if self._worker is not None:
-            self._worker.join(timeout)
-            self._worker = None
+        deadline = time.time() + timeout
+        if self._dispatcher is not None:
+            self._dispatcher.join(max(0.0, deadline - time.time()))
+            self._dispatcher = None
+        for lane in self.lanes.values():
+            if lane.thread is not None:
+                lane.thread.join(max(0.0, deadline - time.time()))
+                lane.thread = None
         # anything that slipped into the queue around shutdown would
         # otherwise wait forever — no worker will ever drain it
         self._drop_undurable()
+        self._fail_pending()
 
     # -- submission ----------------------------------------------------------
 
@@ -110,10 +208,43 @@ class ClusteringService:
         *,
         params: Dict[str, Any],
         executor: Optional[str] = None,
+        priority: int = PRIORITY_NORMAL,
+        deadline: Optional[float] = None,
+        ttl: Optional[float] = None,
+    ) -> MiningRequest:
+        """Deprecated shim: use :class:`repro.service.client.MiningClient`.
+
+        Kept so pre-pool callers continue to work; returns the raw
+        :class:`MiningRequest` whose ``wait()`` is the old blocking API.
+        """
+        warnings.warn(
+            "ClusteringService.submit is deprecated; use "
+            "repro.service.MiningClient.submit (returns a ResultHandle)",
+            DeprecationWarning, stacklevel=2)
+        return self._submit(tenant, algo, data, params=params,
+                            executor=executor, priority=priority,
+                            deadline=deadline, ttl=ttl)
+
+    def _submit(
+        self,
+        tenant: str,
+        algo: str,
+        data: np.ndarray,
+        *,
+        params: Dict[str, Any],
+        executor: Optional[str] = None,
+        priority: int = PRIORITY_NORMAL,
+        deadline: Optional[float] = None,
+        ttl: Optional[float] = None,
     ) -> MiningRequest:
         data = np.ascontiguousarray(np.asarray(data, np.float32))
+        if ttl is not None:
+            ttl_deadline = time.time() + ttl
+            deadline = (ttl_deadline if deadline is None
+                        else min(deadline, ttl_deadline))
         req = MiningRequest(tenant=tenant, algo=algo, data=data,
-                            params=dict(params), executor=executor)
+                            params=dict(params), executor=executor,
+                            priority=priority, deadline=deadline)
         # reject params the batch key cannot hash at the door, not in the
         # worker thread (an unhashable value would kill the service loop)
         try:
@@ -132,6 +263,11 @@ class ClusteringService:
                 executor=str(cached.get("executor", "cache")),
                 latency_s=req.latency or 0.0, cache_hit=True)
             return req
+        if req.expired():
+            req.fail(RequestDropped(
+                f"request {req.request_id} was already past its deadline "
+                f"at submission"))
+            return req
         with self._lock:
             # check-and-enqueue under the same lock stop() takes before its
             # final drop pass, so no request can slip in behind shutdown
@@ -141,11 +277,12 @@ class ClusteringService:
                 return req
             self.queue.submit(req)   # raises BacklogFull at the door
             self._inflight[req.request_id] = req
+        req.add_done_callback(self._evict_inflight)
         return req
 
-    # -- worker loop ---------------------------------------------------------
+    # -- dispatcher ----------------------------------------------------------
 
-    def _loop(self) -> None:
+    def _dispatch_loop(self) -> None:
         while self._running and not self.token.cancelled():
             try:
                 batches = self.batcher.poll()
@@ -157,20 +294,71 @@ class ClusteringService:
                 time.sleep(self.poll_interval)
                 continue
             for batch in batches:
-                self._run_batch(batch)
-        if self._running is False and not self.token.cancelled():
+                self._assign(batch)
+        if not self.token.cancelled():
             # graceful stop: drain whatever is staged before exiting
             for batch in self.batcher.flush_all():
-                self._run_batch(batch)
-        if self.token.cancelled():
+                self._assign(batch)
+        else:
             self._drop_undurable()
+        for lane in self.lanes.values():
+            lane.put_sentinel()
 
-    def _run_batch(self, batch: MicroBatch) -> None:
+    def _assign(self, batch: MicroBatch) -> None:
+        """Route a formed batch to the least-loaded compatible lane."""
+        key = batch.key
+        params = key.params_dict
+        n = max(r.n_points for r in batch.requests)
         try:
-            outcome = self.executor.run_batch(batch, token=self.token)
+            names = self.registry.candidates(
+                key.algo, n=n, d=key.features, batch_size=batch.size,
+                params=params, explicit=key.executor)
+        except KeyError as e:
+            for req in batch.requests:
+                req.fail(e)
+            return
+        est = estimate_work(key.algo, n, key.features, batch.size, params)
+        lane = min((self.lanes[name] for name in names
+                    if name in self.lanes),
+                   key=lambda ln: ln.load, default=None)
+        if lane is None:
+            for req in batch.requests:
+                req.fail(RequestDropped(
+                    f"no executor lane available for {names}"))
+            return
+        lane.put(batch, est)
+
+    # -- lane workers --------------------------------------------------------
+
+    def _lane_loop(self, lane: ExecutorLane) -> None:
+        while True:
+            _prio, _seq, batch, est = lane.batches.get()
+            if batch is None:
+                return
+            lane.begin(est)
+            ran = False
+            t0 = time.monotonic()
+            try:
+                if self.token.cancelled():
+                    # preempted before this batch became durable (no job
+                    # was formed): the requests must be resubmitted
+                    for req in batch.requests:
+                        req.fail(RequestDropped(
+                            f"request {req.request_id} was queued on lane "
+                            f"{lane.name} when the service was preempted; "
+                            f"resubmit"))
+                    continue
+                ran = True
+                self._run_batch(batch, lane.name)
+            finally:
+                lane.finish(est, time.monotonic() - t0, ran)
+
+    def _run_batch(self, batch: MicroBatch, executor: str) -> None:
+        try:
+            outcome = self.executor.run_batch(batch, token=self.token,
+                                              executor=executor)
         except BaseException as e:
             for req in batch.requests:
-                self._finish(req)
                 req.fail(e)
             return
         self._absorb(batch.requests, outcome)
@@ -184,12 +372,10 @@ class ClusteringService:
         if outcome.suspended:
             self.metrics.record_suspended()
             for req in requests:
-                self._finish(req)
                 req.fail(JobSuspended(outcome.job_id))
             return
         assert outcome.results is not None
         for req, result in zip(requests, outcome.results):
-            self._finish(req)
             if req.cache_key:
                 self.cache.put(req.cache_key, result)
             req.resolve(result)
@@ -198,7 +384,7 @@ class ClusteringService:
                 latency_s=req.latency or 0.0,
                 queue_wait_s=req.queue_wait or 0.0)
 
-    def _finish(self, req: MiningRequest) -> None:
+    def _evict_inflight(self, req: MiningRequest) -> None:
         with self._lock:
             self._inflight.pop(req.request_id, None)
 
@@ -206,10 +392,25 @@ class ClusteringService:
         """Preempted before batching: these requests never became durable."""
         for batch in self.batcher.flush_all():
             for req in batch.requests:
-                self._finish(req)
                 req.fail(RequestDropped(
                     f"request {req.request_id} was still queued when the "
                     f"service was preempted; resubmit"))
+
+    def _fail_pending(self) -> None:
+        """Shutdown backstop: no handle may dangle after stop() returns.
+
+        Anything still tracked — queued behind a dead dispatcher, staged in
+        a lane a worker never drained — is failed so ``wait()`` (with or
+        without a timeout) raises instead of blocking forever.
+        """
+        with self._lock:
+            leftovers = list(self._inflight.values())
+            self._inflight.clear()
+        for req in leftovers:
+            if not req.done():
+                req.fail(RequestDropped(
+                    f"request {req.request_id} was still pending when the "
+                    f"service stopped; resubmit"))
 
     # -- restart path --------------------------------------------------------
 
@@ -236,4 +437,7 @@ class ClusteringService:
         snap["cache"] = self.cache.stats()
         snap["queue_depth"] = len(self.queue)
         snap["queue_rejected"] = self.queue.rejected
+        snap["queue_expired"] = self.queue.expired
+        snap["lanes"] = {name: lane.stats()
+                         for name, lane in self.lanes.items()}
         return snap

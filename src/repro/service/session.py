@@ -1,0 +1,244 @@
+"""StreamingSession — unbounded point streams over mini-batch K-Means.
+
+The batch API answers "cluster this dataset"; a stream never has a whole
+dataset.  A session folds arriving points through
+:func:`repro.core.kmeans.minibatch_step` (Sculley 2010) and keeps the
+entire model — centroids, per-cluster counts, step counter — as a
+:class:`~repro.core.kmeans.MiniBatchState` persisted through the same
+atomic :class:`~repro.checkpoint.store.CheckpointStore` the batch executor
+uses.  That makes streams preemption-safe the way the paper's WorkManager
+jobs are: SIGTERM (or kill -9) between checkpoints loses at most the last
+``checkpoint_every`` mini-batches plus the unprocessed buffer; re-opening
+the same ``(tenant, name)`` resumes the model from its last verified
+checkpoint.
+
+One session is single-writer (guarded by a lock for safety, but the
+intended topology is one producer per stream); distinct tenants and
+distinct stream names never share state — each maps to its own checkpoint
+directory under ``<root>/<tenant>__<name>``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.core import kmeans
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _slug(s: str) -> str:
+    return _SAFE.sub("-", s)
+
+
+class StreamingSession:
+    """Per-tenant streaming K-Means with checkpointed model state.
+
+    ``push()`` buffers points and applies one mini-batch update per
+    ``batch_size`` buffered; the model checkpoints every
+    ``checkpoint_every`` applied steps and on ``close()``.  The first
+    ``>= k`` points seed the centroids (the paper's random-sample init).
+    """
+
+    def __init__(
+        self,
+        root: str,
+        tenant: str,
+        name: str = "default",
+        *,
+        k: int,
+        batch_size: int = 256,
+        checkpoint_every: int = 8,
+        seed: int = 0,
+        keep_last: int = 3,
+        **cfg_kwargs: Any,
+    ) -> None:
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.tenant = tenant
+        self.name = name
+        # streaming batches are small and host-resident; the jnp reference
+        # assignment is the right default (use_kernel=True opts back in)
+        cfg_kwargs.setdefault("use_kernel", False)
+        self.cfg = kmeans.KMeansConfig(k=k, **cfg_kwargs)
+        self.batch_size = batch_size
+        self.checkpoint_every = max(1, checkpoint_every)
+        self.seed = seed
+        self.store = CheckpointStore(
+            os.path.join(root, f"{_slug(tenant)}__{_slug(name)}"),
+            keep_last=keep_last)
+        self._lock = threading.Lock()
+        self._buffer: list = []      # pending np arrays, FIFO
+        self._buffered = 0
+        self._closed = False
+        self.state: Optional[kmeans.MiniBatchState] = self._restore()
+
+    # -- persistence ---------------------------------------------------------
+
+    def _restore(self) -> Optional[kmeans.MiniBatchState]:
+        step = self.store.latest_step()
+        if step is None:
+            return None
+        manifest = self.store.manifest(step)
+        ckpt_k = int(manifest["leaves"]["centroids"]["shape"][0])
+        if ckpt_k != self.cfg.k:
+            raise ValueError(
+                f"stream {self.tenant}/{self.name} was checkpointed with "
+                f"k={ckpt_k}, cannot reopen with k={self.cfg.k}")
+        like = {
+            leaf: np.zeros(ent["shape"], dtype=np.dtype(ent["dtype"]))
+            for leaf, ent in manifest["leaves"].items()
+        }
+        tree = self.store.restore(step, like)
+        return kmeans.MiniBatchState.from_tree(
+            {key: np.asarray(val) for key, val in tree.items()})
+
+    def checkpoint(self) -> Optional[str]:
+        """Persist the model now; returns the checkpoint path (None before
+        the model is initialised)."""
+        with self._lock:
+            return self._checkpoint_locked()
+
+    def _checkpoint_locked(self) -> Optional[str]:
+        if self.state is None:
+            return None
+        return self.store.save(
+            self.state.step, self.state.as_tree(),
+            metadata={"tenant": self.tenant, "stream": self.name,
+                      "k": self.cfg.k})
+
+    # -- the stream ----------------------------------------------------------
+
+    def push(self, points: np.ndarray) -> int:
+        """Feed points into the stream; returns mini-batch steps applied.
+
+        Points buffer until a full ``batch_size`` is available, then fold
+        into the model one batch at a time (each a single jitted step, one
+        compile per batch shape for the whole process).
+        """
+        if self._closed:
+            raise RuntimeError(f"stream {self.tenant}/{self.name} is closed")
+        points = np.ascontiguousarray(np.asarray(points, np.float32))
+        if points.ndim != 2 or points.shape[0] < 1:
+            raise ValueError(f"points must be (n, d), got {points.shape}")
+        with self._lock:
+            if self.state is not None:
+                d = int(self.state.centroids.shape[1])
+                if points.shape[1] != d:
+                    raise ValueError(
+                        f"stream {self.tenant}/{self.name} has d={d}, "
+                        f"got points with d={points.shape[1]}")
+            self._buffer.append(points)
+            self._buffered += points.shape[0]
+            return self._process_locked(final=False)
+
+    def flush(self) -> int:
+        """Fold any buffered remainder through as one (short) mini-batch."""
+        with self._lock:
+            return self._process_locked(final=True)
+
+    def _take_locked(self, count: int) -> np.ndarray:
+        out, need = [], count
+        while need > 0:
+            head = self._buffer[0]
+            if head.shape[0] <= need:
+                out.append(self._buffer.pop(0))
+                need -= head.shape[0]
+            else:
+                out.append(head[:need])
+                self._buffer[0] = head[need:]
+                need = 0
+        self._buffered -= count
+        return out[0] if len(out) == 1 else np.concatenate(out)
+
+    def _process_locked(self, final: bool) -> int:
+        import jax
+
+        applied = 0
+        # seed the model once >= k points have arrived
+        if self.state is None:
+            if self._buffered < self.cfg.k:
+                return 0
+            # the seeding take must cover k even when batch_size < k —
+            # minibatch_init needs k distinct sample points
+            x0 = self._take_locked(
+                min(self._buffered, max(self.batch_size, self.cfg.k)))
+            self.state = kmeans.minibatch_init(
+                jax.random.PRNGKey(self.seed), x0, self.cfg)
+            # the seeding points also train: they are part of the stream
+            self.state = kmeans.minibatch_step(self.state, x0, self.cfg)
+            applied += 1
+        while self._buffered >= self.batch_size:
+            xb = self._take_locked(self.batch_size)
+            self.state = kmeans.minibatch_step(self.state, xb, self.cfg)
+            applied += 1
+        if final and self._buffered > 0:
+            xb = self._take_locked(self._buffered)
+            self.state = kmeans.minibatch_step(self.state, xb, self.cfg)
+            applied += 1
+        if applied:
+            before = self.state.step - applied
+            if self.state.step // self.checkpoint_every > \
+                    before // self.checkpoint_every:
+                self._checkpoint_locked()
+        return applied
+
+    # -- reads ---------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Current model view (centroids are None before initialisation)."""
+        with self._lock:
+            if self.state is None:
+                return {"initialized": False, "tenant": self.tenant,
+                        "stream": self.name, "buffered": self._buffered,
+                        "centroids": None, "step": 0, "n_seen": 0}
+            return {
+                "initialized": True,
+                "tenant": self.tenant,
+                "stream": self.name,
+                "buffered": self._buffered,
+                "centroids": np.asarray(self.state.centroids, np.float32),
+                "counts": np.asarray(self.state.counts, np.float32),
+                "step": self.state.step,
+                "n_seen": self.state.n_seen,
+            }
+
+    def assign(self, points: np.ndarray) -> np.ndarray:
+        """Classify points against the current centroids (int16 labels,
+        the paper's per-point word); does not advance the stream."""
+        with self._lock:
+            if self.state is None:
+                raise RuntimeError(
+                    f"stream {self.tenant}/{self.name} has no model yet "
+                    f"(needs >= k={self.cfg.k} points)")
+            centroids = self.state.centroids
+        import jax.numpy as jnp
+
+        from repro.kernels.distance.ref import assign_clusters_ref
+
+        labels, _ = assign_clusters_ref(
+            jnp.asarray(points, jnp.float32), centroids)
+        return np.asarray(labels, np.int16)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Flush the buffer and write a final checkpoint."""
+        if self._closed:
+            return
+        with self._lock:
+            self._process_locked(final=True)
+            self._checkpoint_locked()
+            self._closed = True
+
+    def __enter__(self) -> "StreamingSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
