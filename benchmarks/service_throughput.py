@@ -18,9 +18,19 @@ Two axes of the perf trajectory:
    regression (everything serialising behind one lane) shows up as a
    starved lane or an overlap ratio <= 1.
 
+3. **Distributed lane** — one request over a (deliberately tiny)
+   per-device memory budget rides the load alongside normal requests.
+   The cost model must route it to the ``distributed`` paradigm with NO
+   caller opt-in, and its labels must match the single-device reference
+   on the same data.  Run under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (as CI does) to
+   exercise a real 4-way shard on CPU; exits nonzero if the oversized
+   request never lands on the distributed lane or the labels diverge.
+
     PYTHONPATH=src python benchmarks/service_throughput.py            # fast
     PYTHONPATH=src python benchmarks/service_throughput.py --full
-    PYTHONPATH=src python benchmarks/service_throughput.py --smoke    # CI
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python benchmarks/service_throughput.py --smoke  # CI
 """
 
 from __future__ import annotations
@@ -133,6 +143,69 @@ def run_overlap(smoke: bool = False) -> Dict:
         shutil.rmtree(workdir, ignore_errors=True)
 
 
+def run_distributed(smoke: bool = False) -> Dict:
+    """Oversized request auto-routed to the distributed lane, end to end.
+
+    A tiny device budget (64 KiB) makes a modest K-Means request
+    "oversized", so the check runs in seconds on CPU while exercising the
+    full path: admission -> singleton bypass batch -> distributed lane ->
+    sharded execution -> labels identical to the single-device reference.
+    Well-separated clusters keep the label comparison exact across
+    reduction orders (1 vs N devices change all-reduce summation order).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import kmeans
+    from repro.service import ClusteringService, MiningClient
+
+    budget = 64 * 1024   # ~49 KiB/1k pts for k=4 kmeans: n >= 2048 is over
+    n = 2048 if smoke else 4096
+    rng = np.random.default_rng(11)
+    centers = np.array([[0.0, 0.0], [40.0, 0.0], [0.0, 40.0], [40.0, 40.0]],
+                       np.float32)
+    x = np.concatenate([
+        c + rng.normal(0.0, 1.0, size=(n // 4, 2)).astype(np.float32)
+        for c in centers
+    ])
+    rng.shuffle(x)
+    seed = 99
+    workdir = tempfile.mkdtemp(prefix="svc_dist_")
+    try:
+        service = ClusteringService(
+            workdir, max_batch=4, max_wait_s=0.005, cache_entries=0,
+            device_budget_bytes=budget)
+        client = MiningClient(service=service)
+        with service:
+            small = [
+                client.submit(f"t{i}", "kmeans",
+                              x[i * 16:(i + 2) * 16],
+                              params={"k": 2, "seed": i})
+                for i in range(4)
+            ]
+            big = client.submit("big-tenant", "kmeans", x,
+                                params={"k": 4, "seed": seed,
+                                        "max_iters": 50})
+            labels = big.result(600)["labels"]
+            for h in small:
+                h.result(600)
+        snap = client.metrics()
+        ref = kmeans.fit_cancellable(
+            jax.random.PRNGKey(seed), jnp.asarray(x),
+            kmeans.KMeansConfig(k=4, use_kernel=False, max_iters=50))
+        dist_stats = snap["by_executor"].get("distributed", {})
+        return {
+            "devices": jax.device_count(),
+            "n_points": int(x.shape[0]),
+            "distributed_batches": int(dist_stats.get("batches", 0)),
+            "labels_match": bool(
+                (labels == np.asarray(ref.labels)).all()),
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -170,6 +243,22 @@ def main() -> None:
         print("# lanes overlapped: wall < sum of per-lane busy time")
     else:
         print("# warning: no overlap measured (single-core host?)")
+
+    dist = run_distributed(smoke=args.smoke)
+    print(f"# distributed lane: {dist['n_points']} points over "
+          f"{dist['devices']} device(s), "
+          f"{dist['distributed_batches']} batch(es), "
+          f"labels_match={dist['labels_match']}")
+    if dist["distributed_batches"] < 1:
+        # routing regression: the oversized request never reached the
+        # distributed paradigm (cost model / budget / bypass broke)
+        print("# FAIL: oversized request never landed on the distributed "
+              "lane", file=sys.stderr)
+        sys.exit(1)
+    if not dist["labels_match"]:
+        print("# FAIL: sharded labels diverged from the single-device "
+              "reference", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -18,21 +18,64 @@ Two distribution strategies, recorded for the §Perf comparison:
    compute of step s (XLA latency-hiding scheduler; verified in the dry-run
    HLO).  This is the beyond-paper distributed optimization for the
    technique's own dry-run cell.
+
+Both strategies now also back the serving layer's ``distributed`` paradigm
+(:mod:`repro.service.dispatch`): one request too large for a single device
+is sharded over every local device and driven by the *resumable* host loops
+at the bottom of this module — :func:`sharded_kmeans_fit_resumable` and
+:func:`sharded_dbscan_fit_resumable` — which poll the paper's abort flag
+between collective launches and snapshot device-agnostic state (replicated
+centroids, gathered packed word + frontier), so a sharded job killed
+mid-shard resumes exactly like a single-device job, even on a host with a
+different device count.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from repro.runtime.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.kmeans import KMeansConfig, kmeans_step
+from repro.core.cancellation import CancellationToken
+from repro.core.dbscan import (
+    DBSCANConfig,
+    DBSCANResult,
+    DBSCANRunState,
+    MAX_CLUSTER_ID,
+    finish,
+    pack_state,
+    unpack_state,
+)
+from repro.core.kmeans import (
+    KMeansConfig,
+    KMeansResult,
+    kmeans_step,
+    masked_kmeans_step,
+)
 from repro.kernels.distance.ref import assign_clusters_ref
 from repro.kernels.neighbor.ref import _sq_dists  # noqa: F401 (docs)
+
+
+def local_mesh(axis: str = "data") -> Mesh:
+    """1-D mesh over every local device (the serving layer's shard domain).
+
+    Device discovery goes through the wrapper library
+    (:func:`repro.runtime.backend.discover_backend`), never at import time.
+    """
+    from repro.runtime import backend as backend_mod
+
+    backend = backend_mod.discover_backend()
+    return Mesh(np.asarray(backend.devices), (axis,))
+
+
+def shard_rows(n: int, shards: int) -> int:
+    """Rows per shard so ``shards * shard_rows(n, shards) >= n``."""
+    return -(-n // max(1, shards))
 
 
 # ---------------------------------------------------------------------------
@@ -62,6 +105,29 @@ def make_sharded_kmeans_step(mesh: Mesh, cfg: KMeansConfig):
         step,
         in_shardings=(x_sharding, c_sharding),
         out_shardings=(a_sharding, c_sharding, c_sharding, c_sharding),
+    )
+
+
+@functools.lru_cache(maxsize=32)
+def make_sharded_masked_kmeans_step(mesh: Mesh, cfg: KMeansConfig):
+    """Like :func:`make_sharded_kmeans_step` but over a *padded* batch item:
+    points and the validity mask are sharded, masked-out rows carry no
+    weight, so the serving layer's pow2-bucketed requests shard without
+    perturbing their results.  Cached per (mesh, cfg): the serving host loop
+    calls this every step and must reuse one executable.
+    """
+    daxes = data_axes(mesh)
+    x_sharding = NamedSharding(mesh, P(daxes, None))
+    m_sharding = NamedSharding(mesh, P(daxes))
+    c_sharding = NamedSharding(mesh, P())
+
+    def step(x, c, mask):
+        return masked_kmeans_step(x, c, mask, cfg)
+
+    return jax.jit(
+        step,
+        in_shardings=(x_sharding, c_sharding, m_sharding),
+        out_shardings=(m_sharding, c_sharding, c_sharding, c_sharding),
     )
 
 
@@ -109,8 +175,10 @@ def _tile_adj(xi, xj, eps2):
     return d2 <= eps2
 
 
-def ring_degree(mesh: Mesh, x: jax.Array, eps: float, axis: str = "data"):
-    """deg[i] over row-sharded x without materializing replicated X."""
+@functools.lru_cache(maxsize=32)
+def make_ring_degree(mesh: Mesh, eps: float, axis: str = "data"):
+    """Cached jitted ring-degree (jit reuses one executable per shape —
+    the serving host loops call this once per kernel launch)."""
     eps2 = float(eps) ** 2
 
     def local(x_shard):
@@ -122,17 +190,14 @@ def ring_degree(mesh: Mesh, x: jax.Array, eps: float, axis: str = "data"):
         init = jnp.zeros((x_shard.shape[0],), jnp.int32)
         return _ring_body(x_shard, x_shard, combine, init, axis)
 
-    f = shard_map(
+    return jax.jit(shard_map(
         local, mesh=mesh, in_specs=P(axis, None), out_specs=P(axis)
-    )
-    return jax.jit(f)(x)
+    ))
 
 
-def ring_expand(
-    mesh: Mesh, x: jax.Array, frontier: jax.Array, eps: float,
-    axis: str = "data",
-):
-    """reach[i] = any_j adj[i,j] & frontier[j], ring-rotated like above."""
+@functools.lru_cache(maxsize=32)
+def make_ring_expand(mesh: Mesh, eps: float, axis: str = "data"):
+    """Cached jitted ring frontier expansion (one BFS depth per call)."""
     eps2 = float(eps) ** 2
 
     def local(x_shard, f_shard):
@@ -144,13 +209,207 @@ def ring_expand(
         init = jnp.zeros((x_shard.shape[0],), bool)
         return _ring_body(x_shard, (x_shard, f_shard), combine, init, axis)
 
-    f = shard_map(
+    return jax.jit(shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis)),
         out_specs=P(axis),
+    ))
+
+
+def ring_degree(mesh: Mesh, x: jax.Array, eps: float, axis: str = "data"):
+    """deg[i] over row-sharded x without materializing replicated X."""
+    return make_ring_degree(mesh, float(eps), axis)(x)
+
+
+def ring_expand(
+    mesh: Mesh, x: jax.Array, frontier: jax.Array, eps: float,
+    axis: str = "data",
+):
+    """reach[i] = any_j adj[i,j] & frontier[j], ring-rotated like above."""
+    return make_ring_expand(mesh, float(eps), axis)(x, frontier)
+
+
+# ---------------------------------------------------------------------------
+# Resumable sharded fits — the serving layer's oversized-request path
+# ---------------------------------------------------------------------------
+#
+# Both loops mirror their single-device twins (`kmeans.fit_cancellable`,
+# `dbscan.fit_resumable`): the abort flag is polled between collective
+# launches, and the state reported through ``on_state`` is *gathered to the
+# host* and device-count independent — K-Means state is the replicated
+# (k, d) centroid matrix + iteration counter, DBSCAN state is the paper's
+# packed int16 word + BFS frontier over all rows.  A checkpoint written on a
+# 4-device mesh therefore resumes on 1 device (or 8) bit-identically.
+
+
+def sharded_kmeans_fit_resumable(
+    mesh: Mesh,
+    x_pad: np.ndarray,
+    mask: np.ndarray,
+    cfg: KMeansConfig,
+    token: Optional[CancellationToken] = None,
+    *,
+    centroids: np.ndarray,
+    start_iteration: int = 0,
+    on_state: Optional[Callable[[Dict[str, np.ndarray]], None]] = None,
+    state_interval: int = 8,
+) -> Tuple[KMeansResult, Optional[Dict[str, np.ndarray]]]:
+    """Masked Lloyd host loop with points/mask sharded over the mesh.
+
+    ``x_pad`` must have rows divisible by the mesh's data extent (the
+    caller pads; see ``shard_rows``).  Returns ``(result, mid_state)`` where
+    ``mid_state`` is the resume snapshot on cancellation (None otherwise),
+    in the same tree form the single-device paradigm checkpoints.
+    """
+    daxes = data_axes(mesh)
+    step = make_sharded_masked_kmeans_step(mesh, cfg)
+    xs = jax.device_put(jnp.asarray(x_pad, jnp.float32),
+                        NamedSharding(mesh, P(daxes, None)))
+    ms = jax.device_put(jnp.asarray(mask, bool),
+                        NamedSharding(mesh, P(daxes)))
+    c = jnp.asarray(centroids, jnp.float32)
+    assign = jnp.zeros((x_pad.shape[0],), jnp.int32)
+    inertia = jnp.float32(jnp.inf)
+    it = start_iteration
+    stepped = False
+    converged = False
+    cancelled = False
+    while it < cfg.max_iters:
+        if token is not None and token.cancelled():
+            cancelled = True
+            break
+        assign, c, shift, inertia = step(xs, c, ms)
+        stepped = True
+        it += 1
+        if on_state is not None and it % state_interval == 0:
+            on_state({
+                "centroids": np.asarray(c, np.float32),
+                "iteration": np.int32(it),
+            })
+        if float(shift) < cfg.tol:
+            converged = True
+            break
+    if not stepped and not cancelled:
+        # resumed at (or past) the iteration ceiling: the checkpoint holds
+        # centroids but no labels.  One step yields the assignment/inertia
+        # of the *incoming* centroids (computed before the update), which
+        # we keep — without it the result would be all-zero labels.
+        assign, _, _, inertia = step(xs, c, ms)
+    result = KMeansResult(
+        centroids=c,
+        labels=jnp.asarray(assign).astype(jnp.int16),
+        inertia=inertia,
+        iterations=jnp.int32(it),
+        converged=jnp.asarray(converged),
+        cancelled=cancelled,
     )
-    return jax.jit(f)(x, frontier)
+    mid = None
+    if cancelled:
+        mid = {
+            "centroids": np.asarray(c, np.float32),
+            "iteration": np.int32(it),
+        }
+    return result, mid
+
+
+def sharded_dbscan_fit_resumable(
+    mesh: Mesh,
+    x_pad: np.ndarray,
+    cfg: DBSCANConfig,
+    token: Optional[CancellationToken] = None,
+    *,
+    state: Optional[DBSCANRunState] = None,
+    valid_mask: Optional[np.ndarray] = None,
+    on_state: Optional[Callable[[DBSCANRunState], None]] = None,
+    state_interval: int = 8,
+    axis: str = "data",
+) -> Tuple[DBSCANResult, Optional[DBSCANRunState]]:
+    """DBSCAN host loop with the two O(n^2) kernels ring-sharded.
+
+    The degree kernel and every frontier expansion run as ring collectives
+    (1/p-th of X per device); the O(n) bookkeeping — the paper's packed
+    int16 word — stays on the host, which is exactly what makes the state
+    checkpointable and mesh-shape independent.  Same contract as
+    :func:`repro.core.dbscan.fit_resumable`.
+    """
+    n = x_pad.shape[0]
+    degree_fn = make_ring_degree(mesh, float(cfg.eps), axis)
+    expand_fn = make_ring_expand(mesh, float(cfg.eps), axis)
+    x_sharding = NamedSharding(mesh, P(axis, None))
+    f_sharding = NamedSharding(mesh, P(axis))
+    xs = jax.device_put(jnp.asarray(x_pad, jnp.float32), x_sharding)
+
+    deg = np.asarray(degree_fn(xs))          # ring launch 1 (degree kernel)
+    core = deg >= cfg.min_pts
+    if valid_mask is not None:
+        core = core & np.asarray(valid_mask)
+
+    if state is not None:
+        labels, visited, member, _ = (
+            np.asarray(a) for a in unpack_state(np.asarray(state.packed)))
+        frontier = np.asarray(state.frontier, bool)
+        cid = int(state.cid)
+        nexp = int(state.nexp)
+    else:
+        labels = np.zeros((n,), np.int32)
+        visited = np.zeros((n,), bool)
+        member = np.zeros((n,), bool)
+        frontier = np.zeros((n,), bool)
+        cid = 0
+        nexp = 0
+    cancelled = False
+
+    def _poll() -> bool:
+        return token is not None and token.cancelled()
+
+    def _snapshot() -> DBSCANRunState:
+        return DBSCANRunState(
+            packed=np.asarray(pack_state(labels, visited, member, core)),
+            frontier=np.asarray(frontier),
+            cid=cid,
+            nexp=nexp,
+        )
+
+    while True:
+        while bool(frontier.any()):
+            if _poll():
+                cancelled = True
+                break
+            fs = jax.device_put(jnp.asarray(frontier), f_sharding)
+            reached = np.asarray(expand_fn(xs, fs))   # ring expansion launch
+            nexp += 1
+            new = reached & (labels == 0)
+            labels = np.where(new, cid, labels)
+            visited = visited | new
+            member = member | new
+            frontier = new & core
+            if on_state is not None and nexp % state_interval == 0:
+                on_state(_snapshot())
+        if cancelled or _poll():
+            cancelled = True
+            break
+        todo = core & ~visited
+        if not todo.any():
+            break
+        cid += 1
+        if cid > MAX_CLUSTER_ID:
+            raise ValueError(
+                f"dataset produced more than {MAX_CLUSTER_ID} clusters — the "
+                f"paper's int16 state word cannot represent cluster id {cid}"
+            )
+        frontier = np.zeros((n,), bool)
+        frontier[int(np.argmax(todo))] = True
+
+    packed = pack_state(labels, visited, member, core)
+    result = DBSCANResult(
+        labels=finish(packed),
+        core_mask=jnp.asarray(core),
+        n_clusters=jnp.int32(cid),
+        expansions=jnp.int32(nexp),
+        cancelled=cancelled,
+    )
+    return result, (_snapshot() if cancelled else None)
 
 
 # ---------------------------------------------------------------------------

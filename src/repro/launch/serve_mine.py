@@ -8,10 +8,18 @@ modeled energy spend per paradigm.  Backpressure is honoured: when
 admission sheds load with ``BacklogFull``, the driver sleeps the rejected
 request's ``retry_after`` estimate and resubmits instead of hammering the
 door.  ``--resume`` first completes any batches a previous (killed)
-process left SUSPENDED.
+process left SUSPENDED.  ``--oversized N`` mixes in N requests larger than
+the per-device memory budget (``--device-budget-mb``): the cost model
+routes them to the ``distributed`` lane, which shards each across every
+local device.
 
     PYTHONPATH=src python -m repro.launch.serve_mine --workdir /tmp/svc \
         --requests 32 --tenants 4 --rate 100 --algo mixed --executor auto
+
+    # oversized mix on a 4-device CPU mesh
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve_mine --workdir /tmp/svc \
+        --requests 16 --oversized 2 --device-budget-mb 0.25
 """
 
 from __future__ import annotations
@@ -39,8 +47,15 @@ MAX_RESUBMITS = 3
 
 def build_workload(n_requests: int, tenants: int, algo: str, *,
                    features: int = 2, clusters: int = 4,
-                   points: int = 64, seed: int = 0):
-    """(tenant, algo, data, params) tuples from the paper's generator."""
+                   points: int = 64, seed: int = 0,
+                   oversized: int = 0, oversized_points: int = 1024):
+    """(tenant, algo, data, params) tuples from the paper's generator.
+
+    ``oversized`` appends that many extra-large K-Means requests
+    (``oversized_points`` points per cluster) to the mix — with a small
+    ``--device-budget-mb`` these exceed the per-device budget and exercise
+    the distributed lane under real traffic.
+    """
     cfg = dbscan.DBSCANConfig.paper_defaults(features)
     out = []
     for i in range(n_requests):
@@ -53,6 +68,12 @@ def build_workload(n_requests: int, tenants: int, algo: str, *,
             else {"k": clusters, "seed": i, "max_iters": 50}
         )
         out.append((f"tenant-{i % tenants}", this_algo, np.asarray(x), params))
+    for j in range(oversized):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), j)
+        x, _, _ = make_blobs(
+            key, ClusterSpec(features, clusters, oversized_points))
+        out.append((f"tenant-{j % tenants}", "kmeans", np.asarray(x),
+                    {"k": clusters, "seed": 10_000 + j, "max_iters": 50}))
     return out
 
 
@@ -109,12 +130,23 @@ def main() -> None:
     ap.add_argument("--algo", choices=("dbscan", "kmeans", "mixed"),
                     default="mixed")
     ap.add_argument("--executor",
-                    choices=("auto", "pallas-kernel", "jax-ref", "numpy-mt"),
+                    choices=("auto", "pallas-kernel", "jax-ref", "numpy-mt",
+                             "distributed"),
                     default="auto")
     ap.add_argument("--features", type=int, default=2)
     ap.add_argument("--clusters", type=int, default=4)
     ap.add_argument("--points", type=int, default=64,
                     help="points per cluster per request")
+    ap.add_argument("--oversized", type=int, default=0,
+                    help="extra oversized K-Means requests mixed into the "
+                         "load (they bypass coalescing and ride the "
+                         "distributed lane when over the device budget)")
+    ap.add_argument("--oversized-points", type=int, default=1024,
+                    help="points per cluster for each oversized request")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="per-device memory budget; requests whose working "
+                         "set exceeds it are sharded across all devices "
+                         "(default: fraction of the discovered chip's HBM)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
     ap.add_argument("--ttl", type=float, default=None,
@@ -128,6 +160,8 @@ def main() -> None:
         args.workdir,
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1000.0,
+        device_budget_bytes=(None if args.device_budget_mb is None
+                             else args.device_budget_mb * 2**20),
     )
     client = MiningClient(service=service)
     if args.resume:
@@ -140,7 +174,8 @@ def main() -> None:
 
     workload = build_workload(
         args.requests, args.tenants, args.algo,
-        features=args.features, clusters=args.clusters, points=args.points)
+        features=args.features, clusters=args.clusters, points=args.points,
+        oversized=args.oversized, oversized_points=args.oversized_points)
     executor = None if args.executor == "auto" else args.executor
     # SIGTERM/SIGINT -> cooperative preemption: in-flight batches
     # checkpoint and park SUSPENDED (finish later with --resume)

@@ -13,14 +13,25 @@ each batch as a durable job that survives being killed at any moment.
 Unbounded point streams ride :class:`StreamingSession` — mini-batch K-Means
 with per-tenant model state in the checkpoint store.
 
+Requests too large for any single device are not refused: the cost model
+routes them to the ``distributed`` paradigm, which shards one request
+across every local device (GSPMD K-Means, ring-systolic DBSCAN) with the
+same checkpoint/resume guarantees as single-device batches.  Dispatch is a
+two-phase plan/execute contract: placement, shard layout, and cost/energy
+estimates are decided (and persisted) before any data moves.
+
     client    — MiningClient + ResultHandle: the async front door
     session   — StreamingSession: checkpointed per-tenant streams
-    queue     — admission control: priority lanes, deadlines, fairness
-    batcher   — micro-batching: coalesce + pad + max-wait deadline
-    dispatch  — paradigm registry + cost model (pallas-kernel/jax-ref/numpy-mt)
+    queue     — admission control: priority lanes, deadlines, fairness,
+                per-tenant token-bucket rate limits
+    batcher   — micro-batching: coalesce + pad + max-wait deadline;
+                oversized requests bypass into singleton sharded batches
+    dispatch  — paradigm registry + plan/execute cost model
+                (pallas-kernel/jax-ref/numpy-mt/distributed)
     executor  — durable batch execution: jobs + checkpoints + resume
-    cache     — content-hash result cache
-    metrics   — latency percentiles, batch occupancy, energy proxy
+    cache     — content-hash result cache (disk spill + TTL)
+    metrics   — latency percentiles, batch occupancy, energy proxy +
+                per-paradigm joules-per-work EWMA (dispatch feedback)
     service   — the engine tying it together (executor lane pool)
 """
 
@@ -28,9 +39,11 @@ from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
 from repro.service.cache import ResultCache, content_key
 from repro.service.client import MiningClient, ResultHandle
 from repro.service.dispatch import (
+    EXECUTOR_DISTRIBUTED,
     EXECUTOR_JAX_REF,
     EXECUTOR_NUMPY_MT,
     EXECUTOR_PALLAS,
+    ExecutionPlan,
     ParadigmRegistry,
     default_registry,
 )
@@ -44,8 +57,10 @@ from repro.service.queue import (
     BacklogFull,
     JobSuspended,
     MiningRequest,
+    RateLimited,
     RequestCancelled,
     RequestDropped,
+    RequestTooLarge,
 )
 from repro.service.service import ClusteringService, ExecutorLane
 from repro.service.session import StreamingSession
@@ -57,9 +72,11 @@ __all__ = [
     "BatchKey",
     "BatchOutcome",
     "ClusteringService",
+    "EXECUTOR_DISTRIBUTED",
     "EXECUTOR_JAX_REF",
     "EXECUTOR_NUMPY_MT",
     "EXECUTOR_PALLAS",
+    "ExecutionPlan",
     "ExecutorLane",
     "JobSuspended",
     "MicroBatch",
@@ -70,8 +87,10 @@ __all__ = [
     "PRIORITY_INTERACTIVE",
     "PRIORITY_NORMAL",
     "ParadigmRegistry",
+    "RateLimited",
     "RequestCancelled",
     "RequestDropped",
+    "RequestTooLarge",
     "ResultCache",
     "ResultHandle",
     "ServiceMetrics",

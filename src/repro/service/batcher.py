@@ -10,6 +10,13 @@ time", Fig. 6) across requests instead of paying it per request.
 Flush policy: a staged group is emitted when it reaches ``max_batch``
 requests (occupancy 1.0) or when its oldest request has waited
 ``max_wait_s`` (the latency ceiling a half-empty batch is allowed to add).
+
+Oversized requests — working set over the per-device memory budget (the
+``oversized`` predicate, usually ``ParadigmRegistry.oversized``) — bypass
+coalescing entirely: each becomes a singleton batch the moment it drains.
+There is nothing to amortise (no other request shares its compiled
+program's shape) and no reason to wait; the batch is marked ``oversized``
+and the cost model routes it to the distributed paradigm.
 """
 
 from __future__ import annotations
@@ -18,7 +25,7 @@ import dataclasses
 import itertools
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.service.queue import (
     AdmissionQueue,
@@ -73,6 +80,7 @@ class MicroBatch:
     capacity: int                 # max_batch at formation time
     created: float = dataclasses.field(default_factory=time.time)
     batch_id: int = dataclasses.field(default_factory=lambda: next(_BATCH_IDS))
+    oversized: bool = False       # singleton over the per-device budget
 
     @property
     def size(self) -> int:
@@ -103,10 +111,12 @@ class MicroBatcher:
         *,
         max_batch: int = 8,
         max_wait_s: float = 0.02,
+        oversized: Optional[Callable[[MiningRequest], bool]] = None,
     ) -> None:
         self.queue = queue
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.oversized = oversized
         self._lock = threading.Lock()
         self._staged: Dict[BatchKey, List[MiningRequest]] = {}
 
@@ -159,6 +169,34 @@ class MicroBatcher:
             self._staged.setdefault(
                 BatchKey.for_request(req), []).append(req)
 
+    def _bypass_oversized(
+        self, drained: List[MiningRequest], now: float,
+    ) -> tuple:
+        """Split drained requests into (to-stage, singleton batches).
+
+        An oversized request never waits for batch-mates: it is claimed and
+        emitted as a capacity-1 batch immediately.  A failing predicate
+        falls back to normal staging (the request still runs, just
+        unsharded), and a request that loses its claim to a concurrent
+        cancel is dropped here like everywhere else.
+        """
+        if self.oversized is None:
+            return drained, []
+        normal: List[MiningRequest] = []
+        singles: List[MicroBatch] = []
+        for req in drained:
+            try:
+                big = bool(self.oversized(req))
+            except Exception:
+                big = False
+            if not big:
+                normal.append(req)
+            elif req.claim_for_batch(now):
+                singles.append(MicroBatch(
+                    key=BatchKey.for_request(req), requests=[req],
+                    capacity=1, oversized=True))
+        return normal, singles
+
     def _keys_by_priority(self) -> List[BatchKey]:
         """Staged groups ordered most-urgent-first, so priority carries
         through the staging layer, not just the admission queue."""
@@ -176,10 +214,10 @@ class MicroBatcher:
     def poll(self, now: Optional[float] = None) -> List[MicroBatch]:
         """Drain the admission queue, then flush every full or ripe group."""
         now = time.time() if now is None else now
-        batches: List[MicroBatch] = []
         # drain outside the batcher lock: expired requests fail inside
         # drain(), and completion callbacks must never run under our lock
         drained = self.queue.drain(now=now)
+        drained, batches = self._bypass_oversized(drained, now)
         with self._lock:
             self._stage(drained)
             dead = self._prune(now)
@@ -198,8 +236,8 @@ class MicroBatcher:
     def flush_all(self, now: Optional[float] = None) -> List[MicroBatch]:
         """Emit everything staged regardless of deadline (shutdown drain)."""
         now = time.time() if now is None else now
-        batches: List[MicroBatch] = []
         drained = self.queue.drain(now=now)
+        drained, batches = self._bypass_oversized(drained, now)
         with self._lock:
             self._stage(drained)
             dead = self._prune(now)

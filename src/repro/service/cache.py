@@ -4,18 +4,32 @@ Keyed by SHA-256 of (algorithm, canonical params, data shape/dtype/bytes),
 so two tenants submitting the same dataset with the same parameters share
 one computation — the paper's app recomputes from scratch on every run;
 a service must not.  LRU-bounded by entry count; thread-safe.
+
+With ``spill_dir`` set, entries also persist to disk beside the checkpoint
+store: every put writes an atomic ``.npz`` (arrays) + JSON (scalars)
+snapshot, and a memory miss falls back to the spill file — so a restarted
+service answers repeat queries from a warm cache instead of recomputing,
+the same restart story the job checkpoints give in-flight batches.  Spill
+files older than ``ttl_s`` are treated as absent and unlinked lazily;
+memory-LRU eviction does NOT remove the spill file (disk is the larger,
+slower tier — TTL is its only eviction).
 """
 
 from __future__ import annotations
 
 import hashlib
+import json
+import os
 import threading
+import time
 from collections import OrderedDict
 from typing import Any, Dict, Optional
 
 import numpy as np
 
 from repro.service.queue import canonical_params
+
+_SCALARS_LEAF = "__scalars__"
 
 
 def content_key(algo: str, params: Dict[str, Any], data: np.ndarray) -> str:
@@ -45,33 +59,125 @@ def _copy_result(result: Dict[str, Any]) -> Dict[str, Any]:
 
 
 class ResultCache:
-    """LRU over result dicts (labels + scalars), keyed by content hash."""
+    """LRU over result dicts (labels + scalars), keyed by content hash.
 
-    def __init__(self, max_entries: int = 256) -> None:
+    ``spill_dir`` enables the disk tier; ``ttl_s`` bounds a spilled entry's
+    age (None = spilled entries never expire).
+    """
+
+    def __init__(self, max_entries: int = 256, *,
+                 spill_dir: Optional[str] = None,
+                 ttl_s: Optional[float] = None) -> None:
         self.max_entries = max_entries
+        self.spill_dir = spill_dir
+        self.ttl_s = ttl_s
         self._lock = threading.Lock()
         self._entries: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.disk_hits = 0
+
+    # -- disk tier -----------------------------------------------------------
+
+    def _spill_path(self, key: str) -> str:
+        assert self.spill_dir is not None
+        # keys are content hashes already, but callers may use free-form
+        # keys in tests — re-hash for a uniformly filesystem-safe name
+        name = hashlib.sha256(key.encode()).hexdigest()
+        return os.path.join(self.spill_dir, f"{name}.npz")
+
+    def _spill(self, key: str, result: Dict[str, Any]) -> None:
+        """Atomic write (tmp + rename): a killed writer never leaves a
+        half-entry a restarted service would trust.  Best-effort: spill
+        I/O failure (disk full, unwritable workdir) must never propagate
+        into the serving path — the entry just stays memory-only."""
+        try:
+            os.makedirs(self.spill_dir, exist_ok=True)
+        except OSError:
+            return
+        path = self._spill_path(key)
+        arrays = {k: v for k, v in result.items()
+                  if isinstance(v, np.ndarray)}
+        scalars = {k: v for k, v in result.items()
+                   if not isinstance(v, np.ndarray)}
+        try:
+            payload = json.dumps(scalars)
+        except TypeError:
+            return                      # non-JSON scalar: memory-only entry
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **{_SCALARS_LEAF: np.asarray(payload)}, **arrays)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    def _load_spilled(self, key: str) -> Optional[Dict[str, Any]]:
+        path = self._spill_path(key)
+        try:
+            age = time.time() - os.path.getmtime(path)
+        except OSError:
+            return None
+        if self.ttl_s is not None and age > self.ttl_s:
+            try:
+                os.unlink(path)         # expired: lazily collected
+            except OSError:
+                pass
+            return None
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                result: Dict[str, Any] = dict(
+                    json.loads(str(z[_SCALARS_LEAF])))
+                for name in z.files:
+                    if name != _SCALARS_LEAF:
+                        result[name] = z[name]
+            return result
+        except Exception:
+            try:
+                os.unlink(path)         # corrupt/truncated: drop it
+            except OSError:
+                pass
+            return None
+
+    # -- the cache API -------------------------------------------------------
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         with self._lock:
             entry = self._entries.get(key)
-            if entry is None:
-                self.misses += 1
-                return None
-            self._entries.move_to_end(key)
-            self.hits += 1
-            return _copy_result(entry)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return _copy_result(entry)
+        if self.spill_dir is not None and self.max_entries > 0:
+            spilled = self._load_spilled(key)
+            if spilled is not None:
+                with self._lock:
+                    self._insert(key, spilled)
+                    self.hits += 1
+                    self.disk_hits += 1
+                return _copy_result(spilled)
+        with self._lock:
+            self.misses += 1
+        return None
+
+    def _insert(self, key: str, result: Dict[str, Any]) -> None:
+        self._entries[key] = _copy_result(result)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
 
     def put(self, key: str, result: Dict[str, Any]) -> None:
         if self.max_entries <= 0:
             return
         with self._lock:
-            self._entries[key] = _copy_result(result)
-            self._entries.move_to_end(key)
-            while len(self._entries) > self.max_entries:
-                self._entries.popitem(last=False)
+            self._insert(key, result)
+        if self.spill_dir is not None:
+            self._spill(key, result)
 
     def __len__(self) -> int:
         with self._lock:
@@ -83,4 +189,5 @@ class ResultCache:
                 "entries": len(self._entries),
                 "hits": self.hits,
                 "misses": self.misses,
+                "disk_hits": self.disk_hits,
             }

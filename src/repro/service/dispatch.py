@@ -4,7 +4,7 @@ The paper benchmarks the same two algorithms across competing paradigms
 (GPU kernels vs. single/multi-threaded CPU) and finds the winner depends on
 workload size: kernel launch + setup overhead buries small jobs, while
 compiled/accelerated code wins at scale (Figs. 4-6).  Here that comparison
-is a *runtime decision*: every batch is routed to one of three executors by
+is a *runtime decision*: every batch is routed to one of four executors by
 a work estimate (point count x feature dim x batch size), unless the
 request pinned one explicitly.
 
@@ -14,6 +14,21 @@ request pinned one explicitly.
                     the paper's compiled-C paradigm
     numpy-mt      — numpy across a thread pool over batch items;
                     the paper's multi-threaded CPU paradigm
+    distributed   — one oversized request sharded across every local
+                    device (GSPMD K-Means + ring-systolic DBSCAN from
+                    core/distributed.py); selected by the cost model when
+                    a request's working set exceeds the per-device memory
+                    budget — the regime every other paradigm would thrash
+                    or OOM in
+
+Dispatch is a two-phase **plan/execute** contract.  ``Paradigm.plan``
+returns an :class:`ExecutionPlan` — device placement, shard layout, padded
+shapes, a fused-op cost estimate and a modeled-joules estimate — without
+touching the data; ``Paradigm.execute`` runs a batch under that plan.  The
+split means placement decisions are inspectable (plans ride in the durable
+job record), resumable (a restarted host re-plans against its *own* device
+topology), and energy-aware (the modeled-joules estimate feeds the
+registry's tie-breaker, the paper's Fig. 9 as a control loop).
 
 All device discovery goes through ``runtime.backend.discover_backend()`` —
 the wrapper-library discipline: nothing here touches jax device state at
@@ -40,11 +55,39 @@ from repro.runtime import backend as backend_mod
 EXECUTOR_PALLAS = "pallas-kernel"
 EXECUTOR_JAX_REF = "jax-ref"
 EXECUTOR_NUMPY_MT = "numpy-mt"
+EXECUTOR_DISTRIBUTED = "distributed"
 
 # Below this many fused ops, dispatch/launch overhead dominates and the
 # multi-threaded host paradigm wins (the paper's small-workload regime).
 SMALL_WORK_THRESHOLD = 1 << 21
 _KMEANS_ITERS_ESTIMATE = 20
+
+# Fraction of a device's HBM one request's working set may occupy before
+# the cost model routes it to the distributed paradigm (the rest is
+# headroom for the batch, compiled executables, and collective buffers).
+DEVICE_BUDGET_FRACTION = 0.25
+
+# Prior for the modeled-joules estimate in a plan before any batch of that
+# paradigm has run: the tablet-class active power from benchmarks/energy.py
+# over an assumed 5e7 fused ops/s — replaced by the per-paradigm EWMA
+# (service/metrics.py) as soon as real executions exist.
+DEFAULT_JOULES_PER_WORK = 3.0 / 5e7
+
+# DBSCAN pad isolation: padded rows sit on a far diagonal in feature 0 so
+# each pad is outside eps of every real point *and* of every other pad —
+# they come out as noise and are sliced off.  One scheme shared by the
+# batch executor (bucket padding) and the distributed paradigm (shard
+# padding): the "pads can never be core/member/frontier" invariant that
+# makes sharded state slicing lossless depends on both using it.
+PAD_SPACING_FACTOR = 16.0
+
+
+def far_diagonal_pad(out: np.ndarray, start: int, eps: float,
+                     high: float) -> None:
+    """Fill rows ``start:`` of ``out`` with the far-diagonal ladder, each
+    row > eps from everything at or below ``high`` and from each other."""
+    spacing = max(PAD_SPACING_FACTOR * eps, 1.0)
+    out[start:, 0] = high + spacing * (1.0 + np.arange(out.shape[0] - start))
 
 
 @dataclasses.dataclass
@@ -68,6 +111,47 @@ class RunOutcome:
     mid_state: Optional[Dict[str, np.ndarray]] = None
 
 
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Phase one of dispatch: where and how a batch will run.
+
+    ``devices``/``shards``/``shard_rows`` describe placement (single-device
+    plans have ``shards == 1``); ``cost`` is the fused-op estimate the lane
+    pool balances on; ``modeled_joules`` is the energy estimate (EWMA
+    joules-per-work x cost, or the prior).  ``config`` is the paradigm's
+    private payload (the compiled-program config) and never serialises —
+    :meth:`summary` is the JSON-able view stored in the durable job record.
+    """
+
+    paradigm: str
+    algo: str
+    params: Dict[str, Any]
+    batch_size: int
+    n_max: int                 # padded rows per item (the batcher's bucket)
+    features: int
+    devices: int = 1           # local devices the plan spans
+    shards: int = 1            # shard count (1 = unsharded)
+    shard_rows: int = 0        # padded rows per shard
+    cost: float = 0.0          # fused-op estimate (dispatch cost model)
+    modeled_joules: float = 0.0
+    config: Any = None         # paradigm-private; not serialised
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-able view for job records, outcomes, and metrics."""
+        return {
+            "paradigm": self.paradigm,
+            "algo": self.algo,
+            "batch_size": self.batch_size,
+            "n_max": self.n_max,
+            "features": self.features,
+            "devices": self.devices,
+            "shards": self.shards,
+            "shard_rows": self.shard_rows,
+            "cost": self.cost,
+            "modeled_joules": self.modeled_joules,
+        }
+
+
 ItemDone = Callable[[int, np.ndarray, Dict[str, Any]], None]
 ItemState = Callable[[int, Dict[str, np.ndarray]], None]
 
@@ -77,15 +161,50 @@ def _cancelled(token) -> bool:
 
 
 class Paradigm:
-    """Base executor: runs batch items, reports via callbacks."""
+    """Base executor: plans a batch's placement, then runs its items.
+
+    The two phases are separable on purpose: the batch executor persists
+    the plan summary before running, and a resumed job re-plans on the
+    reattaching host (whose device topology may differ).
+    """
 
     name: str = "abstract"
     resumable_mid_item: bool = False
 
-    def run(
+    def plan(
         self,
         algo: str,
         params: Dict[str, Any],
+        *,
+        batch_size: int,
+        n_max: int,
+        features: int,
+        energy_hint: Optional[float] = None,
+    ) -> ExecutionPlan:
+        """Default single-device plan; paradigms override placement."""
+        cost = estimate_work(algo, n_max, features, batch_size, params)
+        jpw = DEFAULT_JOULES_PER_WORK if energy_hint is None else energy_hint
+        return ExecutionPlan(
+            paradigm=self.name,
+            algo=algo,
+            params=dict(params),
+            batch_size=batch_size,
+            n_max=n_max,
+            features=features,
+            devices=1,
+            shards=1,
+            shard_rows=n_max,
+            cost=cost,
+            modeled_joules=jpw * cost,
+            config=self._config(algo, params),
+        )
+
+    def _config(self, algo: str, params: Dict[str, Any]) -> Any:
+        raise NotImplementedError
+
+    def execute(
+        self,
+        plan: ExecutionPlan,
         items: List[ItemView],
         token,
         on_item_done: ItemDone,
@@ -105,6 +224,11 @@ class JaxParadigm(Paradigm):
     def __init__(self, name: str, use_kernel: bool) -> None:
         self.name = name
         self.use_kernel = use_kernel
+
+    def _config(self, algo: str, params: Dict[str, Any]) -> Any:
+        if algo == "dbscan":
+            return _dbscan_config(params, use_kernel=self.use_kernel)
+        return _kmeans_config(params, use_kernel=self.use_kernel)
 
     # -- DBSCAN --------------------------------------------------------------
 
@@ -152,6 +276,7 @@ class JaxParadigm(Paradigm):
             it = 0
         assign = jnp.zeros((item.x_pad.shape[0],), jnp.int32)
         inertia = float("inf")
+        stepped = False
         converged = False
         while it < cfg.max_iters:
             if _cancelled(token):
@@ -163,6 +288,7 @@ class JaxParadigm(Paradigm):
                     })
             assign, c, shift, inertia = kmeans.masked_kmeans_step_jit(
                 x_pad, c, mask, cfg)
+            stepped = True
             it += 1
             if it % state_interval == 0:
                 on_item_state(item.index, {
@@ -172,6 +298,13 @@ class JaxParadigm(Paradigm):
             if float(shift) < cfg.tol:
                 converged = True
                 break
+        if not stepped:
+            # resumed at the iteration ceiling: the checkpoint carries
+            # centroids, not labels — recover the assignment of the
+            # incoming centroids (computed before the update) rather than
+            # completing with all-zero labels
+            assign, _, _, inertia = kmeans.masked_kmeans_step_jit(
+                x_pad, c, mask, cfg)
         on_item_done(item.index, np.asarray(assign, np.int16), {
             "inertia": float(inertia),
             "iterations": it,
@@ -180,15 +313,13 @@ class JaxParadigm(Paradigm):
         })
         return RunOutcome()
 
-    def run(self, algo, params, items, token, on_item_done, on_item_state,
-            state_interval=8):
+    def execute(self, plan, items, token, on_item_done, on_item_state,
+                state_interval=8):
         backend_mod.discover_backend()  # lazy-load before first device use
-        if algo == "dbscan":
-            cfg = _dbscan_config(params, use_kernel=self.use_kernel)
-            run_item = self._run_dbscan_item
-        else:
-            cfg = _kmeans_config(params, use_kernel=self.use_kernel)
-            run_item = self._run_kmeans_item
+        cfg = plan.config if plan.config is not None else self._config(
+            plan.algo, plan.params)
+        run_item = (self._run_dbscan_item if plan.algo == "dbscan"
+                    else self._run_kmeans_item)
         for item in items:
             if _cancelled(token):
                 return RunOutcome(suspended=True)
@@ -214,6 +345,11 @@ class NumpyMTParadigm(Paradigm):
         import os
 
         self.max_workers = max_workers or min(8, os.cpu_count() or 1)
+
+    def _config(self, algo: str, params: Dict[str, Any]) -> Any:
+        if algo == "dbscan":
+            return _dbscan_config(params, use_kernel=False)
+        return _kmeans_config(params, use_kernel=False)
 
     @staticmethod
     def _dbscan_item(item: ItemView, cfg) -> tuple:
@@ -265,14 +401,12 @@ class NumpyMTParadigm(Paradigm):
             "centroids": c.astype(np.float32),
         }
 
-    def run(self, algo, params, items, token, on_item_done, on_item_state,
-            state_interval=8):
-        if algo == "dbscan":
-            cfg = _dbscan_config(params, use_kernel=False)
-            work = self._dbscan_item
-        else:
-            cfg = _kmeans_config(params, use_kernel=False)
-            work = self._kmeans_item
+    def execute(self, plan, items, token, on_item_done, on_item_state,
+                state_interval=8):
+        cfg = plan.config if plan.config is not None else self._config(
+            plan.algo, plan.params)
+        work = (self._dbscan_item if plan.algo == "dbscan"
+                else self._kmeans_item)
         suspended = threading.Event()
 
         def run_one(item: ItemView):
@@ -289,6 +423,198 @@ class NumpyMTParadigm(Paradigm):
             list(pool.map(run_one, items))
         if suspended.is_set() or _cancelled(token):
             return RunOutcome(suspended=True)
+        return RunOutcome()
+
+
+class DistributedParadigm(Paradigm):
+    """One oversized request sharded across every local device.
+
+    K-Means runs the GSPMD masked step (`make_sharded_masked_kmeans_step`):
+    points and mask sharded over the mesh, centroids replicated, one
+    all-reduce per Lloyd iteration.  DBSCAN runs the ring-systolic kernels
+    (`make_ring_degree` / `make_ring_expand`): each device keeps 1/p-th of
+    X and column shards rotate with ``ppermute``, so the (n, n) adjacency
+    never materialises anywhere.  Both loops poll the abort flag between
+    collective launches and snapshot *gathered*, device-count-independent
+    state, so a job SIGTERM'd mid-shard resumes on any mesh shape exactly
+    like single-device jobs do.
+
+    The XLA reference math (``use_kernel=False``) backs both algorithms:
+    GSPMD partitions it natively, which is the paper's "same code,
+    different device" portability story at multi-device scale.
+    """
+
+    name = EXECUTOR_DISTRIBUTED
+    resumable_mid_item = True
+
+    def __init__(self, axis: str = "data") -> None:
+        self.axis = axis
+
+    def _config(self, algo: str, params: Dict[str, Any]) -> Any:
+        if algo == "dbscan":
+            return _dbscan_config(params, use_kernel=False)
+        return _kmeans_config(params, use_kernel=False)
+
+    def plan(self, algo, params, *, batch_size, n_max, features,
+             energy_hint=None):
+        backend = backend_mod.discover_backend()
+        from repro.core import distributed as dist
+
+        shards = max(1, backend.device_count)
+        rows = dist.shard_rows(n_max, shards)
+        cost = estimate_work(algo, n_max, features, batch_size, params)
+        jpw = DEFAULT_JOULES_PER_WORK if energy_hint is None else energy_hint
+        return ExecutionPlan(
+            paradigm=self.name,
+            algo=algo,
+            params=dict(params),
+            batch_size=batch_size,
+            n_max=n_max,
+            features=features,
+            devices=backend.device_count,
+            shards=shards,
+            shard_rows=rows,
+            cost=cost,
+            modeled_joules=jpw * cost,
+            config=self._config(algo, params),
+        )
+
+    # -- shard padding -------------------------------------------------------
+
+    @staticmethod
+    def _pad_to_shards(x_pad: np.ndarray, plan: ExecutionPlan) -> np.ndarray:
+        """Grow (n_max, d) to (shards * shard_rows, d) for even sharding.
+
+        Extra DBSCAN rows continue the executor's far-diagonal pattern
+        (each new pad sits beyond eps of every real point and every other
+        pad), so they can never be core, member, or frontier — which is
+        what makes slicing the state back to n_max lossless.
+        """
+        n_pad = plan.shards * plan.shard_rows
+        n_max = x_pad.shape[0]
+        if n_pad <= n_max:
+            return x_pad
+        out = np.zeros((n_pad, x_pad.shape[1]), np.float32)
+        out[:n_max] = x_pad
+        if plan.algo == "dbscan":
+            high = float(np.max(x_pad)) if x_pad.size else 0.0
+            far_diagonal_pad(out, n_max,
+                             float(plan.params.get("eps", 1.0)), high)
+        return out
+
+    @staticmethod
+    def _resize_dbscan_state(state: dbscan.DBSCANRunState,
+                             n: int) -> dbscan.DBSCANRunState:
+        """Slice or zero-extend per-point state to ``n`` rows.
+
+        Rows beyond n_max are shard padding: never core, member, or in the
+        frontier (see ``_pad_to_shards``), so both directions are lossless
+        — a checkpoint written on one mesh resumes on another.
+        """
+        packed = np.zeros((n,), np.int16)
+        frontier = np.zeros((n,), bool)
+        m = min(n, state.packed.shape[0])
+        packed[:m] = state.packed[:m]
+        frontier[:m] = state.frontier[:m]
+        return dbscan.DBSCANRunState(packed=packed, frontier=frontier,
+                                     cid=state.cid, nexp=state.nexp)
+
+    # -- items ---------------------------------------------------------------
+
+    def _kmeans_item(self, mesh, plan, item, token, on_item_done,
+                     on_item_state, state_interval):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import distributed as dist
+
+        cfg = plan.config
+        n_max = item.x_pad.shape[0]
+        x_sh = self._pad_to_shards(item.x_pad, plan)
+        mask = np.arange(x_sh.shape[0]) < item.length
+        if item.mid_state is not None:
+            c0 = np.asarray(item.mid_state["centroids"], np.float32)
+            it0 = int(item.mid_state["iteration"])
+        else:
+            # identical seeding to the single-device paradigms: an
+            # oversized request's labels match the unsharded reference
+            c0 = np.asarray(kmeans.init_centroids(
+                jax.random.PRNGKey(item.seed),
+                jnp.asarray(item.x_pad[: item.length]), cfg))
+            it0 = 0
+        result, mid = dist.sharded_kmeans_fit_resumable(
+            mesh, x_sh, mask, cfg, token,
+            centroids=c0, start_iteration=it0,
+            on_state=lambda s: on_item_state(item.index, s),
+            state_interval=state_interval,
+        )
+        if result.cancelled:
+            return RunOutcome(suspended=True, item_index=item.index,
+                              mid_state=mid)
+        labels = np.asarray(result.labels)[:n_max].astype(np.int16)
+        on_item_done(item.index, labels, {
+            "inertia": float(result.inertia),
+            "iterations": int(result.iterations),
+            "converged": bool(result.converged),
+            "centroids": np.asarray(result.centroids, np.float32),
+        })
+        return RunOutcome()
+
+    def _dbscan_item(self, mesh, plan, item, token, on_item_done,
+                     on_item_state, state_interval):
+        from repro.core import distributed as dist
+
+        cfg = plan.config
+        n_max = item.x_pad.shape[0]
+        x_sh = self._pad_to_shards(item.x_pad, plan)
+        n_pad = x_sh.shape[0]
+        state = None
+        if item.mid_state is not None:
+            state = self._resize_dbscan_state(
+                dbscan.DBSCANRunState.from_tree(item.mid_state), n_pad)
+        valid = np.arange(n_pad) < item.length
+
+        def report(s: dbscan.DBSCANRunState) -> None:
+            # checkpoints carry the (n_max,) view — mesh-shape independent
+            on_item_state(item.index,
+                          self._resize_dbscan_state(s, n_max).as_tree())
+
+        result, run_state = dist.sharded_dbscan_fit_resumable(
+            mesh, x_sh, cfg, token,
+            state=state, valid_mask=valid,
+            on_state=report, state_interval=state_interval,
+            axis=self.axis,
+        )
+        if result.cancelled:
+            assert run_state is not None
+            return RunOutcome(
+                suspended=True, item_index=item.index,
+                mid_state=self._resize_dbscan_state(
+                    run_state, n_max).as_tree())
+        labels = np.asarray(result.labels)[:n_max].astype(np.int16)
+        real = labels[: item.length]
+        on_item_done(item.index, labels, {
+            "n_clusters": int(real.max(initial=0)),
+            "noise": int(np.sum(real == 0)),
+            "expansions": int(result.expansions),
+        })
+        return RunOutcome()
+
+    def execute(self, plan, items, token, on_item_done, on_item_state,
+                state_interval=8):
+        from repro.core import distributed as dist
+
+        backend_mod.discover_backend()
+        mesh = dist.local_mesh(self.axis)
+        run_item = (self._dbscan_item if plan.algo == "dbscan"
+                    else self._kmeans_item)
+        for item in items:
+            if _cancelled(token):
+                return RunOutcome(suspended=True)
+            outcome = run_item(mesh, plan, item, token, on_item_done,
+                               on_item_state, state_interval)
+            if outcome.suspended:
+                return outcome
         return RunOutcome()
 
 
@@ -327,9 +653,34 @@ def estimate_work(algo: str, n: int, d: int, batch_size: int,
     return per_item * batch_size
 
 
+def estimate_item_bytes(algo: str, n: int, d: int,
+                        params: Dict[str, Any]) -> float:
+    """Peak single-device working set of ONE request (the budget input).
+
+    DBSCAN is dominated by the (n, n) f32 distance intermediate of the
+    degree/expansion kernels; K-Means by the points, the (n, k) one-hot,
+    and the per-point temporaries.  Deliberately rough — it only has to
+    rank 'fits one device' vs 'does not'.
+    """
+    if algo == "dbscan":
+        return 4.0 * float(n) * n + 8.0 * float(n) * d
+    k = int(params.get("k", 8))
+    return 8.0 * float(n) * d + 4.0 * float(n) * k + 16.0 * float(n)
+
+
 class ParadigmRegistry:
-    def __init__(self) -> None:
+    """Name -> paradigm map plus the two-stage cost model.
+
+    ``device_budget_bytes`` bounds one request's working set on a single
+    device; None derives it from the discovered chip
+    (``DEVICE_BUDGET_FRACTION`` of HBM).  A request over budget is routed
+    to the distributed paradigm when one is registered.
+    """
+
+    def __init__(self,
+                 device_budget_bytes: Optional[float] = None) -> None:
         self._paradigms: Dict[str, Paradigm] = {}
+        self.device_budget_bytes = device_budget_bytes
 
     def register(self, paradigm: Paradigm) -> None:
         self._paradigms[paradigm.name] = paradigm
@@ -345,6 +696,30 @@ class ParadigmRegistry:
     def names(self) -> List[str]:
         return sorted(self._paradigms)
 
+    # -- memory budget -------------------------------------------------------
+
+    def budget_bytes(self) -> float:
+        if self.device_budget_bytes is not None:
+            return float(self.device_budget_bytes)
+        chip = backend_mod.discover_backend().chip
+        return DEVICE_BUDGET_FRACTION * chip.hbm_bytes
+
+    def oversized(self, algo: str, n: int, d: int,
+                  params: Dict[str, Any]) -> bool:
+        """Does one request's working set exceed the per-device budget?
+
+        The budget is judged at the batcher's pow2 bucket, not the raw
+        point count — execution pads to the bucket, and for DBSCAN the
+        (n_max, n_max) intermediate makes that up to a 4x difference.
+        """
+        from repro.service.batcher import bucket_points
+
+        n_max = bucket_points(n)
+        return (estimate_item_bytes(algo, n_max, d, params)
+                > self.budget_bytes())
+
+    # -- selection -----------------------------------------------------------
+
     def select(
         self,
         algo: str,
@@ -353,10 +728,12 @@ class ParadigmRegistry:
         batch_size: int,
         params: Dict[str, Any],
         explicit: Optional[str] = None,
+        energy_hints: Optional[Dict[str, float]] = None,
     ) -> str:
         """Cost-model dispatch (explicit override wins, and is validated)."""
         return self.candidates(algo, n, d, batch_size, params,
-                               explicit=explicit)[0]
+                               explicit=explicit,
+                               energy_hints=energy_hints)[0]
 
     def candidates(
         self,
@@ -366,6 +743,7 @@ class ParadigmRegistry:
         batch_size: int,
         params: Dict[str, Any],
         explicit: Optional[str] = None,
+        energy_hints: Optional[Dict[str, float]] = None,
     ) -> List[str]:
         """Compatible executors in cost-model preference order.
 
@@ -373,24 +751,41 @@ class ParadigmRegistry:
         the executor pool may spill to when the preferred lane is loaded
         (e.g. both jitted paradigms can take large batches — the pool picks
         the least-loaded of them).  An explicit override is a single-entry
-        list: a pinned request never rides another lane.
+        list: a pinned request never rides another lane.  A request whose
+        working set exceeds the per-device budget has exactly one home:
+        the distributed paradigm (no caller opt-in, no spill lanes).
+        ``energy_hints`` (EWMA modeled joules per unit work, from
+        :class:`repro.service.metrics.ServiceMetrics`) tie-break the
+        accelerated candidates toward the cheaper paradigm — the paper's
+        Fig. 9 energy comparison closed into a control loop.
         """
         if explicit is not None:
             self.get(explicit)
             return [explicit]
+        if (EXECUTOR_DISTRIBUTED in self._paradigms
+                and self.oversized(algo, n, d, params)):
+            return [EXECUTOR_DISTRIBUTED]
+        # the distributed lane exists *for* oversized requests; it never
+        # competes for work that fits one device
+        pool = [nm for nm in self._paradigms if nm != EXECUTOR_DISTRIBUTED]
         if estimate_work(algo, n, d, batch_size, params) < SMALL_WORK_THRESHOLD:
-            return [name for name in (EXECUTOR_NUMPY_MT,)
-                    if name in self._paradigms] or self.names()
+            return ([name for name in (EXECUTOR_NUMPY_MT,) if name in pool]
+                    or sorted(pool) or self.names())
         backend = backend_mod.discover_backend()
         accel = ([EXECUTOR_PALLAS, EXECUTOR_JAX_REF] if backend.is_tpu
                  else [EXECUTOR_JAX_REF, EXECUTOR_PALLAS])
-        out = [name for name in accel if name in self._paradigms]
-        return out or self.names()
+        out = [name for name in accel if name in pool]
+        if (energy_hints and len(out) > 1
+                and all(name in energy_hints for name in out)):
+            out = sorted(out, key=lambda name: energy_hints[name])
+        return out or sorted(pool) or self.names()
 
 
-def default_registry() -> ParadigmRegistry:
-    reg = ParadigmRegistry()
+def default_registry(
+        device_budget_bytes: Optional[float] = None) -> ParadigmRegistry:
+    reg = ParadigmRegistry(device_budget_bytes=device_budget_bytes)
     reg.register(JaxParadigm(EXECUTOR_PALLAS, use_kernel=True))
     reg.register(JaxParadigm(EXECUTOR_JAX_REF, use_kernel=False))
     reg.register(NumpyMTParadigm())
+    reg.register(DistributedParadigm())
     return reg

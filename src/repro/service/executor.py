@@ -33,15 +33,15 @@ from repro.core.cancellation import CancellationToken
 from repro.core.jobs import JobState, JobStore
 from repro.runtime.preemption import HoldAlive
 from repro.service.batcher import MicroBatch
-from repro.service.dispatch import ItemView, ParadigmRegistry, default_registry
+from repro.service.dispatch import (
+    ExecutionPlan,
+    ItemView,
+    ParadigmRegistry,
+    default_registry,
+    far_diagonal_pad,
+)
 
 SERVICE_JOB_KIND = "service-batch"
-
-# DBSCAN pad isolation: padded rows sit on a far diagonal in feature 0 so
-# each pad is outside eps of every real point *and* of every other pad —
-# they come out as noise and are sliced off (see kernels/neighbor/ops.py
-# for the same trick at the block level).
-_PAD_SPACING_FACTOR = 16.0
 
 
 @dataclasses.dataclass
@@ -59,16 +59,19 @@ class BatchOutcome:
     tenants: List[str]
     results: Optional[List[Dict[str, Any]]] = None  # per item, when complete
     cache_keys: Optional[List[str]] = None          # per item content hashes
+    plan: Optional[Dict[str, Any]] = None           # ExecutionPlan.summary()
 
 
 def _pad_item(x: np.ndarray, n_max: int, algo: str, eps: float,
               data_high: float) -> np.ndarray:
+    """Pad to the bucket; DBSCAN pads ride the shared far-diagonal scheme
+    (see ``dispatch.far_diagonal_pad``; same trick as the block level in
+    kernels/neighbor/ops.py)."""
     n, d = x.shape
     out = np.zeros((n_max, d), np.float32)
     out[:n] = x
     if algo == "dbscan" and n < n_max:
-        spacing = max(_PAD_SPACING_FACTOR * eps, 1.0)
-        out[n:, 0] = data_high + spacing * (1.0 + np.arange(n_max - n))
+        far_diagonal_pad(out, n, eps, data_high)
     return out
 
 
@@ -106,11 +109,15 @@ class BatchExecutor:
         token: Optional[CancellationToken] = None,
         progress_hook=None,
         executor: Optional[str] = None,
+        energy_hints: Optional[Dict[str, float]] = None,
     ) -> BatchOutcome:
         """Execute a fresh micro-batch (enqueue -> claim -> run).
 
         ``executor`` pins the paradigm (the lane pool has already chosen
         one); without it the registry's cost model selects as before.
+        ``energy_hints`` (EWMA joules per unit work, per paradigm) make
+        the persisted plan's modeled_joules reflect observed behaviour
+        instead of the static prior.
         """
         key = batch.key
         params = key.params_dict
@@ -127,6 +134,12 @@ class BatchExecutor:
             )
         n_max, d = batch.n_max, key.features
         size = batch.size
+        # phase one of the plan/execute contract: placement, shard layout,
+        # cost + modeled joules — persisted with the job so the routing
+        # decision is inspectable after the fact
+        plan = self.registry.get(executor).plan(
+            key.algo, params, batch_size=size, n_max=n_max, features=d,
+            energy_hint=(energy_hints or {}).get(executor))
         eps = float(params.get("eps", 1.0))
         data_high = max(
             float(np.max(r.data)) if r.data.size else 0.0
@@ -152,6 +165,7 @@ class BatchExecutor:
             # content hashes survive in the job record so a resumed batch
             # can re-populate the result cache after a restart
             "cache_keys": [r.cache_key or "" for r in batch.requests],
+            "plan": plan.summary(),
         }
         job_id = self.jobs.enqueue(SERVICE_JOB_KIND, job_params)
         job = self.jobs.claim(job_id)
@@ -166,7 +180,8 @@ class BatchExecutor:
         path = ckpt.save(0, state, metadata={"params": job_params})
         self.jobs.report_progress(job_id, step=0, checkpoint_path=path)
         return self._execute(job_id, job_params, state, token,
-                             progress_hook=progress_hook, resumed=False)
+                             progress_hook=progress_hook, resumed=False,
+                             plan=plan)
 
     # -- state trees ---------------------------------------------------------
 
@@ -212,8 +227,16 @@ class BatchExecutor:
         *,
         progress_hook=None,
         resumed: bool,
+        plan: Optional[ExecutionPlan] = None,
     ) -> BatchOutcome:
         paradigm = self.registry.get(jp["executor"])
+        if plan is None:
+            # resume path: re-plan on THIS host — sharded checkpoints carry
+            # gathered, device-count-independent state, so a batch suspended
+            # on a 4-device mesh resumes correctly on 1 (or 8)
+            plan = paradigm.plan(
+                jp["algo"], jp["params"], batch_size=jp["size"],
+                n_max=jp["n_max"], features=jp["features"])
         ckpt = self._ckpt(job_id)
         lock = threading.Lock()
         save_step = [int(ckpt.latest_step() or 0)]
@@ -278,9 +301,8 @@ class BatchExecutor:
         error: Optional[BaseException] = None
         with HoldAlive(self.jobs, job_id, interval=hb):
             try:
-                outcome = paradigm.run(
-                    jp["algo"], jp["params"], items, token,
-                    on_item_done, on_item_state,
+                outcome = paradigm.execute(
+                    plan, items, token, on_item_done, on_item_state,
                     state_interval=self.checkpoint_every,
                 )
             except BaseException as e:
@@ -298,6 +320,7 @@ class BatchExecutor:
             capacity=jp["capacity"], n_max=jp["n_max"],
             request_ids=list(jp["request_ids"]), tenants=list(jp["tenants"]),
             cache_keys=list(jp.get("cache_keys") or []),
+            plan=plan.summary(),
         )
         if outcome.suspended:
             with lock:

@@ -5,6 +5,14 @@ Fig. 9 finding: power draw is roughly constant per device class, so energy
 differences come from runtime — E = P_active * t).  Per-batch execution
 seconds times the active-power constant gives modeled joules per paradigm,
 putting an energy axis on every serving run without hardware counters.
+
+Beyond the scorecard, the proxy now closes a control loop: every batch
+that reports its plan's ``work`` estimate updates a per-paradigm EWMA of
+modeled joules per unit work (:meth:`ServiceMetrics.energy_hints`), which
+the dispatcher feeds back into ``ParadigmRegistry.select`` as a
+tie-breaker — the paradigm that has been observed cheaper per op wins
+ties, which is the paper's Fig. 9 comparison applied continuously at
+runtime instead of once in a benchmark table.
 """
 
 from __future__ import annotations
@@ -21,6 +29,11 @@ P_ACTIVE_WATTS = 3.0
 # Percentiles are computed over a sliding window so a long-lived service
 # never grows its metric state without bound; totals are kept as counters.
 DEFAULT_WINDOW = 10_000
+
+# EWMA smoothing for the per-paradigm joules-per-work estimate: heavy
+# enough history that one slow batch (cold jit compile) cannot flip
+# dispatch, light enough to track a drifting host.
+ENERGY_EWMA_ALPHA = 0.2
 
 
 def percentile(values: List[float], q: float) -> float:
@@ -78,6 +91,8 @@ class ServiceMetrics:
         self.total_cache_hits = 0
         self.total_batches = 0
         self.total_joules = 0.0
+        # executor -> EWMA modeled joules per unit work (the dispatch hint)
+        self._joules_per_work: Dict[str, float] = {}
 
     def record_request(
         self,
@@ -109,6 +124,7 @@ class ServiceMetrics:
         n_max: int,
         exec_s: float,
         resumed: bool = False,
+        work: float = 0.0,
     ) -> None:
         with self._lock:
             self._batches.append(BatchRecord(
@@ -119,6 +135,18 @@ class ServiceMetrics:
             self.total_joules += P_ACTIVE_WATTS * exec_s
             if resumed:
                 self.resumed_batches += 1
+            if work > 0.0 and exec_s > 0.0:
+                inst = P_ACTIVE_WATTS * exec_s / work
+                old = self._joules_per_work.get(executor)
+                self._joules_per_work[executor] = (
+                    inst if old is None
+                    else (1.0 - ENERGY_EWMA_ALPHA) * old
+                    + ENERGY_EWMA_ALPHA * inst)
+
+    def energy_hints(self) -> Dict[str, float]:
+        """Per-executor EWMA modeled joules per unit work (dispatch input)."""
+        with self._lock:
+            return dict(self._joules_per_work)
 
     def record_suspended(self) -> None:
         with self._lock:
@@ -130,6 +158,7 @@ class ServiceMetrics:
             batches = list(self._batches)
             suspended = self.suspended_batches
             resumed = self.resumed_batches
+            jpw = dict(self._joules_per_work)
             totals = {
                 "requests": self.total_requests,
                 "cache_hits": self.total_cache_hits,
@@ -158,6 +187,7 @@ class ServiceMetrics:
                     sum(b.occupancy for b in bs) / len(bs) if bs else 0.0),
                 "exec_s": sum(b.exec_s for b in bs),
                 "modeled_joules": sum(b.modeled_joules for b in bs),
+                "joules_per_work": jpw.get(name),
             }
 
         return {
@@ -177,5 +207,6 @@ class ServiceMetrics:
             "suspended_batches": suspended,
             "resumed_batches": resumed,
             "modeled_joules": sum(b.modeled_joules for b in batches),
+            "joules_per_work": jpw,
             "by_executor": by_executor,
         }

@@ -16,6 +16,18 @@ still queued is failed with :class:`RequestDropped` at drain time and never
 occupies a batch slot; a request cancelled through its handle is likewise
 skipped.
 
+Per-tenant *rate* is bounded by a token bucket at the door
+(``tenant_rate`` requests/s refill, ``tenant_burst`` capacity): a tenant
+over its rate is rejected with :class:`RateLimited` carrying the exact
+``retry_after`` until its next token — backlog bounds protect queue
+*depth*, the bucket protects arrival *rate*, so a bursty tenant cannot
+monopolise drain capacity even while the backlog has room.
+
+Oversized requests (working set beyond one device's memory budget) are
+admitted like any other when the service can shard them — the
+``too_large`` hook only bounces them (:class:`RequestTooLarge`) on
+services without a distributed paradigm, where they could never execute.
+
 Durability note: the admission queue is in-memory.  A request becomes
 durable the moment the executor forms its batch job and writes the step-0
 checkpoint (see :mod:`repro.service.executor`); anything still queued when
@@ -66,6 +78,32 @@ class BacklogFull(RuntimeError):
         self.depth = depth
         self.limit = limit
         self.retry_after = retry_after
+
+
+class RateLimited(RuntimeError):
+    """Admission rejected: the tenant's token bucket is empty.
+
+    ``retry_after`` is exact (seconds until the bucket refills one token),
+    not an estimate — clients that sleep it and resubmit are admitted.
+    """
+
+    def __init__(self, message: str, *, tenant: str, retry_after: float,
+                 rate: float, burst: int) -> None:
+        super().__init__(message)
+        self.tenant = tenant
+        self.retry_after = retry_after
+        self.rate = rate
+        self.burst = burst
+
+
+class RequestTooLarge(RuntimeError):
+    """Admission rejected: the request's working set exceeds the per-device
+    budget and this service has no distributed paradigm to shard it."""
+
+    def __init__(self, message: str, *, tenant: str, n_points: int) -> None:
+        super().__init__(message)
+        self.tenant = tenant
+        self.n_points = n_points
 
 
 class RequestDropped(RuntimeError):
@@ -269,9 +307,20 @@ class AdmissionQueue:
     """Bounded, priority-laned, tenant-fair FIFO-of-FIFOs (thread-safe)."""
 
     def __init__(self, max_backlog: int = 256,
-                 max_per_tenant: int = 64) -> None:
+                 max_per_tenant: int = 64,
+                 tenant_rate: Optional[float] = None,
+                 tenant_burst: int = 8,
+                 too_large: Optional[
+                     Callable[["MiningRequest"], bool]] = None) -> None:
         self.max_backlog = max_backlog
         self.max_per_tenant = max_per_tenant
+        self.tenant_rate = tenant_rate      # tokens/s; None = unlimited
+        self.tenant_burst = max(1, tenant_burst)
+        self.too_large = too_large
+        # tenant -> [tokens, last_refill_time]
+        self._buckets: Dict[str, List[float]] = {}
+        self.rate_limited = 0
+        self.too_large_rejected = 0
         self._lock = threading.Lock()
         # priority -> (OrderedDict keeps a stable tenant rotation order:
         # insertion order, rotated on every drain so no tenant is
@@ -306,10 +355,43 @@ class AdmissionQueue:
                                 if self._drain_rate > 0 else inst)
         self._drained_at = now
 
+    # -- rate limiting -------------------------------------------------------
+
+    def _take_token(self, tenant: str, now: float) -> None:
+        """Refill-and-take under the queue lock; raises when the bucket is
+        dry.  The failed attempt does not drain anything, so the
+        ``retry_after`` it reports stays exact under hammering."""
+        assert self.tenant_rate is not None
+        bucket = self._buckets.get(tenant)
+        if bucket is None:
+            bucket = [float(self.tenant_burst), now]
+            self._buckets[tenant] = bucket
+        tokens = min(float(self.tenant_burst),
+                     bucket[0] + (now - bucket[1]) * self.tenant_rate)
+        bucket[1] = now
+        if tokens < 1.0:
+            bucket[0] = tokens
+            self.rate_limited += 1
+            retry = (1.0 - tokens) / self.tenant_rate
+            raise RateLimited(
+                f"tenant {tenant!r} over its rate "
+                f"({self.tenant_rate:g}/s, burst {self.tenant_burst}); "
+                f"retry in {retry:.3f}s",
+                tenant=tenant, retry_after=retry,
+                rate=self.tenant_rate, burst=self.tenant_burst)
+        bucket[0] = tokens - 1.0
+
     # -- admission -----------------------------------------------------------
 
     def submit(self, req: MiningRequest) -> None:
         validate_request(req)
+        if self.too_large is not None and self.too_large(req):
+            self.too_large_rejected += 1
+            raise RequestTooLarge(
+                f"request of {req.n_points} points exceeds the per-device "
+                f"memory budget and no distributed paradigm is registered "
+                f"to shard it",
+                tenant=req.tenant, n_points=req.n_points)
         with self._lock:
             tenant_depth = self._tenant_depth.get(req.tenant, 0)
             if self._depth >= self.max_backlog:
@@ -326,6 +408,11 @@ class AdmissionQueue:
                     tenant=req.tenant, depth=tenant_depth,
                     limit=self.max_per_tenant,
                     retry_after=self._retry_after(tenant_depth))
+            # the token is taken only once the request will actually be
+            # admitted: a BacklogFull rejection must not burn rate budget
+            # (the client's honoured retry would then bounce twice)
+            if self.tenant_rate is not None:
+                self._take_token(req.tenant, time.time())
             lane = self._lanes.setdefault(req.priority, OrderedDict())
             pending = lane.get(req.tenant)
             if pending is None:

@@ -22,6 +22,7 @@ over the same path.
 from __future__ import annotations
 
 import itertools
+import os
 import queue as _queue
 import threading
 import time
@@ -34,6 +35,7 @@ from repro.core.cancellation import CancellationToken, CancelReason
 from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
 from repro.service.cache import ResultCache, content_key
 from repro.service.dispatch import (
+    EXECUTOR_DISTRIBUTED,
     ParadigmRegistry,
     default_registry,
     estimate_work,
@@ -119,25 +121,56 @@ class ClusteringService:
         max_wait_s: float = 0.02,
         max_backlog: int = 256,
         max_per_tenant: int = 64,
+        tenant_rate: Optional[float] = None,
+        tenant_burst: int = 8,
         cache_entries: int = 256,
+        cache_spill: bool = True,
+        cache_ttl_s: Optional[float] = 3600.0,
         registry: Optional[ParadigmRegistry] = None,
+        device_budget_bytes: Optional[float] = None,
         heartbeat_timeout: float = 60.0,
         checkpoint_every: int = 8,
         poll_interval: float = 0.002,
     ) -> None:
         self.workdir = workdir
-        self.queue = AdmissionQueue(max_backlog=max_backlog,
-                                    max_per_tenant=max_per_tenant)
-        self.batcher = MicroBatcher(self.queue, max_batch=max_batch,
-                                    max_wait_s=max_wait_s)
+        if registry is None:
+            registry = default_registry(
+                device_budget_bytes=device_budget_bytes)
+        elif device_budget_bytes is not None:
+            # a caller-supplied registry may be shared with other services;
+            # silently rewriting its budget would change THEIR routing
+            raise ValueError(
+                "pass device_budget_bytes either to the service (which "
+                "builds its own registry) or on the registry you supply, "
+                "not both")
+        self.registry = registry
+        # oversized requests are admitted only when they have a home: a
+        # registry without the distributed paradigm bounces them at the
+        # door (RequestTooLarge) instead of letting them thrash a device
+        can_shard = EXECUTOR_DISTRIBUTED in registry.names()
+        self.queue = AdmissionQueue(
+            max_backlog=max_backlog,
+            max_per_tenant=max_per_tenant,
+            tenant_rate=tenant_rate,
+            tenant_burst=tenant_burst,
+            too_large=None if can_shard else self._req_oversized)
+        self.batcher = MicroBatcher(
+            self.queue, max_batch=max_batch, max_wait_s=max_wait_s,
+            oversized=self._req_oversized if can_shard else None)
         self.executor = BatchExecutor(
             workdir,
-            registry=registry or default_registry(),
+            registry=registry,
             heartbeat_timeout=heartbeat_timeout,
             checkpoint_every=checkpoint_every,
         )
-        self.registry = self.executor.registry
-        self.cache = ResultCache(max_entries=cache_entries)
+        # cache_spill=False keeps the in-memory cache but skips the
+        # per-put npz+fsync (for throughput-sensitive deployments that
+        # don't need warm restarts)
+        self.cache = ResultCache(
+            max_entries=cache_entries,
+            spill_dir=(os.path.join(workdir, "cache") if cache_spill
+                       else None),
+            ttl_s=cache_ttl_s)
         self.metrics = ServiceMetrics()
         self.token = CancellationToken()
         self.poll_interval = poll_interval
@@ -147,6 +180,11 @@ class ClusteringService:
         self._running = False
         self._stopped = False
         self._dispatcher: Optional[threading.Thread] = None
+
+    def _req_oversized(self, req: MiningRequest) -> bool:
+        """Does one request's working set exceed the per-device budget?"""
+        return self.registry.oversized(
+            req.algo, req.n_points, req.features, req.params)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -312,7 +350,8 @@ class ClusteringService:
         try:
             names = self.registry.candidates(
                 key.algo, n=n, d=key.features, batch_size=batch.size,
-                params=params, explicit=key.executor)
+                params=params, explicit=key.executor,
+                energy_hints=self.metrics.energy_hints())
         except KeyError as e:
             for req in batch.requests:
                 req.fail(e)
@@ -355,20 +394,40 @@ class ClusteringService:
 
     def _run_batch(self, batch: MicroBatch, executor: str) -> None:
         try:
-            outcome = self.executor.run_batch(batch, token=self.token,
-                                              executor=executor)
+            outcome = self.executor.run_batch(
+                batch, token=self.token, executor=executor,
+                energy_hints=self.metrics.energy_hints())
         except BaseException as e:
             for req in batch.requests:
                 req.fail(e)
             return
-        self._absorb(batch.requests, outcome)
+        try:
+            self._absorb(batch.requests, outcome)
+        except BaseException as e:
+            # absorption (metrics, cache, resolve) must never kill the
+            # lane worker: fail whatever did not resolve and keep serving
+            for req in batch.requests:
+                if not req.done():
+                    req.fail(e)
+
+    @staticmethod
+    def _ewma_work(outcome: BatchOutcome) -> float:
+        """Plan cost for the energy EWMA — only when exec_s covers the
+        whole batch.  A suspended or resumed batch pairs the *full* cost
+        with *partial* execution time; feeding that in would bias the
+        joules-per-work estimate low for whichever paradigm gets
+        preempted most often."""
+        if outcome.suspended or outcome.resumed:
+            return 0.0
+        return float((outcome.plan or {}).get("cost", 0.0))
 
     def _absorb(self, requests: List[MiningRequest],
                 outcome: BatchOutcome) -> None:
         self.metrics.record_batch(
             algo=outcome.algo, executor=outcome.executor, size=outcome.size,
             capacity=outcome.capacity, n_max=outcome.n_max,
-            exec_s=outcome.exec_s, resumed=outcome.resumed)
+            exec_s=outcome.exec_s, resumed=outcome.resumed,
+            work=self._ewma_work(outcome))
         if outcome.suspended:
             self.metrics.record_suspended()
             for req in requests:
@@ -425,7 +484,8 @@ class ClusteringService:
             self.metrics.record_batch(
                 algo=outcome.algo, executor=outcome.executor,
                 size=outcome.size, capacity=outcome.capacity,
-                n_max=outcome.n_max, exec_s=outcome.exec_s, resumed=True)
+                n_max=outcome.n_max, exec_s=outcome.exec_s, resumed=True,
+                work=self._ewma_work(outcome))
             if outcome.results and outcome.cache_keys:
                 for ckey, result in zip(outcome.cache_keys, outcome.results):
                     if ckey:
@@ -438,6 +498,8 @@ class ClusteringService:
         snap["queue_depth"] = len(self.queue)
         snap["queue_rejected"] = self.queue.rejected
         snap["queue_expired"] = self.queue.expired
+        snap["queue_rate_limited"] = self.queue.rate_limited
+        snap["queue_too_large"] = self.queue.too_large_rejected
         snap["lanes"] = {name: lane.stats()
                          for name, lane in self.lanes.items()}
         return snap

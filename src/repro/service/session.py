@@ -20,6 +20,7 @@ directory under ``<root>/<tenant>__<name>``.
 
 from __future__ import annotations
 
+import hashlib
 import os
 import re
 import threading
@@ -30,11 +31,19 @@ import numpy as np
 from repro.checkpoint.store import CheckpointStore
 from repro.core import kmeans
 
-_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+_SAFE = re.compile(r"[^A-Za-z0-9.-]")
 
 
 def _slug(s: str) -> str:
-    return _SAFE.sub("-", s)
+    """Filesystem-safe AND collision-free name component.
+
+    Sanitising alone is lossy ('a/b' and 'a-b' would share a directory,
+    and '__' inside a tenant name would fake the tenant/stream separator),
+    so a short content hash of the raw string rides along — distinct
+    tenants or stream names can never share checkpoint state.
+    """
+    digest = hashlib.sha256(s.encode()).hexdigest()[:8]
+    return f"{_SAFE.sub('-', s)}-{digest}"
 
 
 class StreamingSession:
