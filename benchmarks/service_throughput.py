@@ -27,16 +27,28 @@ Two axes of the perf trajectory:
    exercise a real 4-way shard on CPU; exits nonzero if the oversized
    request never lands on the distributed lane or the labels diverge.
 
+4. **Kill-and-replay gate** (``--recover-gate``) — a child process admits
+   N requests (durable in the write-ahead admission log) without ever
+   batching them, then dies to SIGKILL.  A fresh service over the same
+   workdir runs ``recover()``; the gate exits nonzero if any admitted
+   request fails to come back or its replayed labels diverge from an
+   uninterrupted reference run — the "admitted means durable" contract,
+   enforced in CI.
+
     PYTHONPATH=src python benchmarks/service_throughput.py            # fast
     PYTHONPATH=src python benchmarks/service_throughput.py --full
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python benchmarks/service_throughput.py --smoke  # CI
+    PYTHONPATH=src python benchmarks/service_throughput.py --recover-gate
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import shutil
+import signal
+import subprocess
 import sys
 import tempfile
 import time
@@ -206,13 +218,183 @@ def run_distributed(smoke: bool = False) -> Dict:
         shutil.rmtree(workdir, ignore_errors=True)
 
 
+def _build_gate_workload(n: int):
+    """Deterministic K-Means requests for the kill-and-replay gate.
+
+    Pinned to jax-ref so the uninterrupted reference and the recovered
+    replay run the identical code path (labels must match bit-for-bit).
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(23)
+    out = []
+    for i in range(n):
+        centers = rng.uniform(-20.0, 20.0, size=(3, 2)).astype(np.float32)
+        x = np.concatenate([
+            c + rng.normal(0.0, 0.5, size=(24, 2)).astype(np.float32)
+            for c in centers
+        ])
+        out.append((f"tenant-{i % 3}", "kmeans", x,
+                    {"k": 3, "seed": 100 + i, "max_iters": 50}))
+    return out
+
+
+def _recover_child(workdir: str, n: int) -> None:
+    """Gate child: admit N requests durably, signal readiness, then hang.
+
+    The service is started but tuned so nothing ever batches (huge
+    max_wait, max_batch > N): every request sits in the
+    admission-to-batching window the WAL exists to protect.  The parent
+    SIGKILLs this process once the marker file appears.
+    """
+    from repro.service import ClusteringService, MiningClient
+
+    service = ClusteringService(workdir, max_batch=64, max_wait_s=3600.0)
+    client = MiningClient(service=service)
+    service.start()
+    for tenant, algo, data, params in _build_gate_workload(n):
+        client.submit(tenant, algo, data, params=params, executor="jax-ref")
+    with open(os.path.join(workdir, "ADMITTED"), "w") as f:
+        f.write(str(n))
+    time.sleep(600)          # parent kills us long before this expires
+
+
+def run_recover_gate(smoke: bool = False) -> Dict:
+    """Kill-and-replay: SIGKILL a service with admitted-but-unbatched
+    requests, recover over the same workdir, and demand zero losses.
+
+    A child process admits N requests (durable in the WAL, never batched)
+    and is killed with SIGKILL — no cleanup, no atexit, the admission
+    queue dies in memory.  A fresh service over the same workdir runs
+    ``recover()``: every request must come back through replay, complete,
+    and produce labels identical to an uninterrupted reference run.
+    """
+    import numpy as np
+
+    from repro.service import ClusteringService, MiningClient, content_key
+
+    n = 4 if smoke else 8
+    workload = _build_gate_workload(n)
+
+    # uninterrupted reference run (separate workdir)
+    refdir = tempfile.mkdtemp(prefix="svc_recover_ref_")
+    ref_labels: Dict[str, "np.ndarray"] = {}
+    try:
+        service = ClusteringService(refdir, max_batch=4, max_wait_s=0.005)
+        client = MiningClient(service=service)
+        with service:
+            handles = [
+                client.submit(tenant, algo, data, params=params,
+                              executor="jax-ref")
+                for tenant, algo, data, params in workload
+            ]
+            for (tenant, algo, data, params), h in zip(workload, handles):
+                ref_labels[content_key(algo, params,
+                                       np.asarray(data, np.float32))] = (
+                    h.result(300)["labels"])
+    finally:
+        shutil.rmtree(refdir, ignore_errors=True)
+
+    # crash run: child admits, parent SIGKILLs
+    workdir = tempfile.mkdtemp(prefix="svc_recover_gate_")
+    try:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (
+            os.path.join(os.path.dirname(__file__), "..", "src")
+            + os.pathsep + env.get("PYTHONPATH", ""))
+        proc = subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__),
+             "--recover-child", workdir, str(n)], env=env)
+        marker = os.path.join(workdir, "ADMITTED")
+        deadline = time.time() + 180
+        try:
+            while not os.path.exists(marker):
+                if proc.poll() is not None:
+                    raise RuntimeError(
+                        f"gate child exited early (rc={proc.returncode})")
+                if time.time() > deadline:
+                    raise RuntimeError("gate child never admitted")
+                time.sleep(0.05)
+        finally:
+            if proc.poll() is None:
+                proc.send_signal(signal.SIGKILL)
+            proc.wait(30)
+
+        # recovery run over the dead process's workdir.  Losses are
+        # counted per workload item (did every expected content hash
+        # produce labels?) — arithmetic over replayed/resumed counts can
+        # double-cover a request that is both in a resumed batch and in a
+        # WAL replay (kill between step-0 fsync and its CONSUME record)
+        # and mask a real loss.
+        service = ClusteringService(workdir, max_batch=4, max_wait_s=0.005)
+        client = MiningClient(service=service)
+        produced: Dict[str, "np.ndarray"] = {}
+        with service:
+            summary = client.recover()
+            for o in summary["outcomes"]:
+                if o.results and o.cache_keys:
+                    for ck, res in zip(o.cache_keys, o.results):
+                        produced[ck] = res["labels"]
+            for h in summary["requests"]:
+                try:
+                    produced[h.cache_key] = h.result(300)["labels"]
+                except Exception as e:
+                    # surfaced in CI logs; the per-key loss count below
+                    # still decides pass/fail
+                    print(f"# replayed request {h.request_id} failed: "
+                          f"{e!r}", file=sys.stderr)
+        lost = mismatched = 0
+        for ck, ref in ref_labels.items():
+            got = produced.get(ck)
+            if got is None:
+                lost += 1
+            elif not (got == ref).all():
+                mismatched += 1
+        pending = service.wal.pending() if service.wal is not None else -1
+        return {
+            "admitted": n,
+            "replayed": summary["replayed"],
+            "resumed_batches": summary["resumed_batches"],
+            "cache_hits": summary["cache_hits"],
+            "lost": lost,
+            "mismatched": mismatched,
+            "wal_pending_after": pending,
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI load: one sweep point + lane overlap; "
                          "exits nonzero if a pool lane is starved")
+    ap.add_argument("--recover-gate", action="store_true",
+                    help="run ONLY the kill-and-replay durability gate: "
+                         "SIGKILL a service with admitted-but-unbatched "
+                         "requests, recover(), exit nonzero on any lost "
+                         "request or label mismatch")
+    ap.add_argument("--recover-child", nargs=2, metavar=("WORKDIR", "N"),
+                    help=argparse.SUPPRESS)   # internal: gate child mode
     args = ap.parse_args()
+
+    if args.recover_child:
+        _recover_child(args.recover_child[0], int(args.recover_child[1]))
+        return
+    if args.recover_gate:
+        gate = run_recover_gate(smoke=args.smoke)
+        print(f"# recover gate: {gate['admitted']} admitted, "
+              f"{gate['replayed']} replayed "
+              f"({gate['cache_hits']} cache hits), "
+              f"{gate['lost']} lost, {gate['mismatched']} mismatched, "
+              f"wal pending after: {gate['wal_pending_after']}")
+        if gate["lost"] > 0 or gate["mismatched"] > 0:
+            print("# FAIL: kill-and-replay lost or corrupted admitted "
+                  "requests", file=sys.stderr)
+            sys.exit(1)
+        print("# admitted-means-durable: SIGKILL lost zero requests")
+        return
 
     rows = run(fast=not args.full, smoke=args.smoke)
     print("executor,offered_rps,requests,p50_ms,p99_ms,mean_occupancy,"

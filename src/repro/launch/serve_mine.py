@@ -8,7 +8,9 @@ modeled energy spend per paradigm.  Backpressure is honoured: when
 admission sheds load with ``BacklogFull``, the driver sleeps the rejected
 request's ``retry_after`` estimate and resubmits instead of hammering the
 door.  ``--resume`` first completes any batches a previous (killed)
-process left SUSPENDED.  ``--oversized N`` mixes in N requests larger than
+process left SUSPENDED; ``--recover`` additionally replays every
+admitted-but-unbatched request from the write-ahead admission log, so a
+``kill -9`` at any moment loses nothing that was admitted.  ``--oversized N`` mixes in N requests larger than
 the per-device memory budget (``--device-budget-mb``): the cost model
 routes them to the ``distributed`` lane, which shards each across every
 local device.
@@ -153,6 +155,11 @@ def main() -> None:
                     help="per-request deadline, seconds from submit")
     ap.add_argument("--resume", action="store_true",
                     help="complete SUSPENDED batches from a previous run")
+    ap.add_argument("--recover", action="store_true",
+                    help="full restart path: resume SUSPENDED batches AND "
+                         "replay admitted-but-unbatched requests from the "
+                         "write-ahead admission log (admitted means "
+                         "durable; implies --resume)")
     args = ap.parse_args()
 
     backend_mod.load()
@@ -164,7 +171,7 @@ def main() -> None:
                              else args.device_budget_mb * 2**20),
     )
     client = MiningClient(service=service)
-    if args.resume:
+    if args.resume and not args.recover:
         outcomes = client.resume_suspended()
         for o in outcomes:
             print(f"resumed job {o.job_id}: {o.algo} x{o.size} "
@@ -180,6 +187,22 @@ def main() -> None:
     # SIGTERM/SIGINT -> cooperative preemption: in-flight batches
     # checkpoint and park SUSPENDED (finish later with --resume)
     with PreemptionGuard(service.token), service:
+        if args.recover:
+            # resume suspended batches, then replay every admitted request
+            # the dead process never batched (the WAL's lose-nothing path)
+            summary = client.recover()
+            for o in summary["outcomes"]:
+                print(f"resumed job {o.job_id}: {o.algo} x{o.size} "
+                      f"on {o.executor} in {o.exec_s:.3f}s")
+            print(f"recovered: {summary['resumed_batches']} suspended "
+                  f"batch(es), {summary['replayed']} replayed request(s) "
+                  f"({summary['cache_hits']} cache hits, "
+                  f"{summary['rejected']} rejected)")
+            for h in summary["requests"]:
+                try:
+                    h.result(300)
+                except Exception as e:
+                    print(f"replayed request {h.request_id} failed: {e!r}")
         failures = drive(client, workload, args.rate, executor, ttl=args.ttl)
     snap = client.metrics()
     print(json.dumps(snap, indent=2, default=str))

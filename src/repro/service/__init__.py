@@ -29,6 +29,8 @@ estimates are decided (and persisted) before any data moves.
     dispatch  — paradigm registry + plan/execute cost model
                 (pallas-kernel/jax-ref/numpy-mt/distributed)
     executor  — durable batch execution: jobs + checkpoints + resume
+    wal       — write-ahead admission log: admitted means durable
+                (crash-safe replay of requests not yet batched)
     cache     — content-hash result cache (disk spill + TTL)
     metrics   — latency percentiles, batch occupancy, energy proxy +
                 per-paradigm joules-per-work EWMA (dispatch feedback)
@@ -64,6 +66,7 @@ from repro.service.queue import (
 )
 from repro.service.service import ClusteringService, ExecutorLane
 from repro.service.session import StreamingSession
+from repro.service.wal import RequestLog, WalRecord
 
 __all__ = [
     "AdmissionQueue",
@@ -90,8 +93,10 @@ __all__ = [
     "RateLimited",
     "RequestCancelled",
     "RequestDropped",
+    "RequestLog",
     "RequestTooLarge",
     "ResultCache",
+    "WalRecord",
     "ResultHandle",
     "ServiceMetrics",
     "StreamingSession",

@@ -78,6 +78,11 @@ class ResultHandle:
         return self._request.cache_hit
 
     @property
+    def cache_key(self) -> Optional[str]:
+        """Content hash of (algo, params, data) — stable across replays."""
+        return self._request.cache_key
+
+    @property
     def job_id(self) -> Optional[int]:
         """Durable batch job id once the request is batched (None before)."""
         return self._request.job_id
@@ -188,3 +193,16 @@ class MiningClient:
     def resume_suspended(self):
         """Complete batches a previous (killed) process left SUSPENDED."""
         return self.service.resume_suspended()
+
+    def recover(self) -> Dict[str, Any]:
+        """Full restart path: resume suspended batches, then replay every
+        admitted-but-unbatched request from the write-ahead admission log.
+
+        Returns the engine's recovery summary with ``requests`` wrapped as
+        :class:`ResultHandle` futures — wait on them to drive the replayed
+        work to completion (replays of already-completed content are cache
+        hits and resolve instantly).
+        """
+        summary = self.service.recover()
+        summary["requests"] = [ResultHandle(r) for r in summary["requests"]]
+        return summary

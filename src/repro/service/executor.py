@@ -21,10 +21,11 @@ carry per-item labels plus the mid-item algorithm state.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -40,6 +41,8 @@ from repro.service.dispatch import (
     default_registry,
     far_diagonal_pad,
 )
+
+logger = logging.getLogger(__name__)
 
 SERVICE_JOB_KIND = "service-batch"
 
@@ -94,6 +97,11 @@ class BatchExecutor:
         self.registry = registry or default_registry()
         self.checkpoint_every = checkpoint_every
         self.keep_last = keep_last
+        # fired the moment a batch's step-0 checkpoint exists — the
+        # durability hand-off point where the admission WAL releases its
+        # entries to the job record (see repro.service.wal)
+        self.on_batch_durable: Optional[
+            Callable[[int, List[Any]], None]] = None
 
     def _ckpt(self, job_id: int) -> CheckpointStore:
         return CheckpointStore(
@@ -179,6 +187,14 @@ class BatchExecutor:
         # step-0 checkpoint: the batch is durable from this point on
         path = ckpt.save(0, state, metadata={"params": job_params})
         self.jobs.report_progress(job_id, step=0, checkpoint_path=path)
+        if self.on_batch_durable is not None:
+            # durability has handed over from the admission WAL to the job
+            # record; a failing hook must not fail the batch it protects
+            try:
+                self.on_batch_durable(job_id, batch.requests)
+            except Exception:
+                logger.exception(
+                    "on_batch_durable hook failed for job %d", job_id)
         return self._execute(job_id, job_params, state, token,
                              progress_hook=progress_hook, resumed=False,
                              plan=plan)

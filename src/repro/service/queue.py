@@ -28,11 +28,16 @@ admitted like any other when the service can shard them — the
 ``too_large`` hook only bounces them (:class:`RequestTooLarge`) on
 services without a distributed paradigm, where they could never execute.
 
-Durability note: the admission queue is in-memory.  A request becomes
-durable the moment the executor forms its batch job and writes the step-0
-checkpoint (see :mod:`repro.service.executor`); anything still queued when
-the process dies must be resubmitted — mirroring the paper, where only jobs
-already handed to WorkManager survive the activity.
+Durability note: the admission queue itself is in-memory, but **admitted
+means durable** — the service records every request in the write-ahead
+admission log (:mod:`repro.service.wal`) *before* it enters this queue,
+and only marks the entry consumed once the request's batch job writes its
+step-0 checkpoint (see :mod:`repro.service.executor`).  A process killed
+with requests still queued here loses nothing:
+:meth:`~repro.service.service.ClusteringService.recover` replays the
+unconsumed log entries through admission on restart.  (Before the WAL,
+only batched requests survived — the paper's model, where only jobs
+already handed to WorkManager outlive the activity.)
 """
 
 from __future__ import annotations
@@ -108,7 +113,17 @@ class RequestTooLarge(RuntimeError):
 
 class RequestDropped(RuntimeError):
     """The request never reached dispatch: the service stopped, or the
-    request's deadline expired while it was still queued; resubmit."""
+    request's deadline expired while it was still queued.
+
+    ``resubmit`` marks drops caused by service shutdown/preemption rather
+    than by the request itself (deadline, cancel): those keep their WAL
+    entry alive, so :meth:`ClusteringService.recover` replays them after
+    restart instead of asking the caller to resend.
+    """
+
+    def __init__(self, message: str, *, resubmit: bool = False) -> None:
+        super().__init__(message)
+        self.resubmit = resubmit
 
 
 class RequestCancelled(RuntimeError):
@@ -157,6 +172,7 @@ class MiningRequest:
     cache_hit: bool = False
     cache_key: Optional[str] = None
     job_id: Optional[int] = None
+    wal_id: Optional[int] = None   # admission-log entry backing this request
     _done: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False)
     _result: Optional[Dict[str, Any]] = dataclasses.field(
@@ -346,31 +362,45 @@ class AdmissionQueue:
         return float(min(5.0, max(0.01, est)))
 
     def _note_drained(self, count: int, now: float) -> None:
+        # every drain — even an empty one — resets the inter-drain clock:
+        # otherwise the first drain after an idle gap divides by the whole
+        # quiet spell, craters the EWMA, and retry_after balloons
+        prev, self._drained_at = self._drained_at, now
         if count <= 0:
             return
-        if self._drained_at is not None:
-            dt = max(1e-6, now - self._drained_at)
+        if prev is not None:
+            dt = max(1e-6, now - prev)
             inst = count / dt
             self._drain_rate = (0.8 * self._drain_rate + 0.2 * inst
                                 if self._drain_rate > 0 else inst)
-        self._drained_at = now
 
     # -- rate limiting -------------------------------------------------------
 
-    def _take_token(self, tenant: str, now: float) -> None:
+    def _take_token(self, tenant: str, now: float,
+                    take: bool = True) -> None:
         """Refill-and-take under the queue lock; raises when the bucket is
         dry.  The failed attempt does not drain anything, so the
-        ``retry_after`` it reports stays exact under hammering."""
+        ``retry_after`` it reports stays exact under hammering.
+        ``take=False`` peeks — same rejection, zero state change (the
+        service's pre-WAL screen)."""
         assert self.tenant_rate is not None
         bucket = self._buckets.get(tenant)
         if bucket is None:
+            if not take:
+                return                  # a fresh bucket starts full
             bucket = [float(self.tenant_burst), now]
             self._buckets[tenant] = bucket
+        # a backwards wall-clock step (NTP, manual set) must refill zero
+        # tokens, not drain them; keep the refill reference at the later
+        # time so the rewound span is not re-credited when the clock
+        # catches back up
+        elapsed = max(0.0, now - bucket[1])
         tokens = min(float(self.tenant_burst),
-                     bucket[0] + (now - bucket[1]) * self.tenant_rate)
-        bucket[1] = now
+                     bucket[0] + elapsed * self.tenant_rate)
         if tokens < 1.0:
-            bucket[0] = tokens
+            if take:
+                bucket[0] = tokens
+                bucket[1] = max(bucket[1], now)
             self.rate_limited += 1
             retry = (1.0 - tokens) / self.tenant_rate
             raise RateLimited(
@@ -379,11 +409,15 @@ class AdmissionQueue:
                 f"retry in {retry:.3f}s",
                 tenant=tenant, retry_after=retry,
                 rate=self.tenant_rate, burst=self.tenant_burst)
+        if not take:
+            return
         bucket[0] = tokens - 1.0
+        bucket[1] = max(bucket[1], now)
 
     # -- admission -----------------------------------------------------------
 
-    def submit(self, req: MiningRequest) -> None:
+    def _screen(self, req: MiningRequest) -> None:
+        """Validation + size checks shared by precheck and submit."""
         validate_request(req)
         if self.too_large is not None and self.too_large(req):
             self.too_large_rejected += 1
@@ -392,22 +426,48 @@ class AdmissionQueue:
                 f"memory budget and no distributed paradigm is registered "
                 f"to shard it",
                 tenant=req.tenant, n_points=req.n_points)
+
+    def _bounds_locked(self, req: MiningRequest) -> None:
+        """Backlog-depth checks under the queue lock."""
+        tenant_depth = self._tenant_depth.get(req.tenant, 0)
+        if self._depth >= self.max_backlog:
+            self.rejected += 1
+            raise BacklogFull(
+                f"global backlog full ({self.max_backlog}); retry later",
+                tenant=None, depth=self._depth, limit=self.max_backlog,
+                retry_after=self._retry_after(self._depth))
+        if tenant_depth >= self.max_per_tenant:
+            self.rejected += 1
+            raise BacklogFull(
+                f"tenant {req.tenant!r} backlog full "
+                f"({self.max_per_tenant}); retry later",
+                tenant=req.tenant, depth=tenant_depth,
+                limit=self.max_per_tenant,
+                retry_after=self._retry_after(tenant_depth))
+
+    def precheck(self, req: MiningRequest) -> None:
+        """Admission screen with zero state change, for the service to run
+        *before* the WAL append: the same structured rejections as
+        :meth:`submit`, so a request the door would bounce anyway never
+        pays a log fsync (nor grows a segment with an instantly-consumed
+        entry).  Best-effort — :meth:`submit` remains authoritative; a
+        race that slips past the precheck is still rejected there.
+        """
+        self._screen(req)
         with self._lock:
-            tenant_depth = self._tenant_depth.get(req.tenant, 0)
-            if self._depth >= self.max_backlog:
-                self.rejected += 1
-                raise BacklogFull(
-                    f"global backlog full ({self.max_backlog}); retry later",
-                    tenant=None, depth=self._depth, limit=self.max_backlog,
-                    retry_after=self._retry_after(self._depth))
-            if tenant_depth >= self.max_per_tenant:
-                self.rejected += 1
-                raise BacklogFull(
-                    f"tenant {req.tenant!r} backlog full "
-                    f"({self.max_per_tenant}); retry later",
-                    tenant=req.tenant, depth=tenant_depth,
-                    limit=self.max_per_tenant,
-                    retry_after=self._retry_after(tenant_depth))
+            self._bounds_locked(req)
+            if self.tenant_rate is not None:
+                self._take_token(req.tenant, time.time(), take=False)
+
+    def submit(self, req: MiningRequest, *, screened: bool = False) -> None:
+        """Admit one request.  ``screened=True`` skips the pure
+        validation/size screen when the caller just ran :meth:`precheck`
+        on the same (immutable) request — the locked bounds/token checks
+        always re-run."""
+        if not screened:
+            self._screen(req)
+        with self._lock:
+            self._bounds_locked(req)
             # the token is taken only once the request will actually be
             # admitted: a BacklogFull rejection must not burn rate budget
             # (the client's honoured retry would then bounce twice)
@@ -419,7 +479,8 @@ class AdmissionQueue:
                 pending = deque()
                 lane[req.tenant] = pending
             pending.append(req)
-            self._tenant_depth[req.tenant] = tenant_depth + 1
+            self._tenant_depth[req.tenant] = (
+                self._tenant_depth.get(req.tenant, 0) + 1)
             self._depth += 1
 
     # -- drain ---------------------------------------------------------------
@@ -458,6 +519,14 @@ class AdmissionQueue:
                         if tenant not in lane:
                             continue
                         req = self._pop_tenant(lane, tenant)
+                        # rotate as we go: each tenant served moves to the
+                        # back the moment it is popped, so when ``limit``
+                        # cuts a rotation short the next drain resumes with
+                        # the tenants this one never reached — under
+                        # sustained limit pressure no tenant is
+                        # systematically favoured by insertion order
+                        if tenant in lane:
+                            lane.move_to_end(tenant)
                         if req.done():            # cancelled while queued
                             continue
                         if req.expired(now):
@@ -468,12 +537,6 @@ class AdmissionQueue:
                         if limit is not None and len(out) >= limit:
                             break
                     else:
-                        # full rotation: move the first tenant to the back so
-                        # the next drain starts one position later
-                        if len(lane) > 1:
-                            first, q = next(iter(lane.items()))
-                            del lane[first]
-                            lane[first] = q
                         continue
                     break
             self._note_drained(len(out) + len(dead), now)

@@ -21,7 +21,10 @@ over the same path.
 
 from __future__ import annotations
 
+import copy
 import itertools
+import json
+import logging
 import os
 import queue as _queue
 import threading
@@ -45,10 +48,34 @@ from repro.service.metrics import ServiceMetrics
 from repro.service.queue import (
     PRIORITY_NORMAL,
     AdmissionQueue,
+    BacklogFull,
     JobSuspended,
     MiningRequest,
+    RateLimited,
     RequestDropped,
 )
+from repro.service.wal import RequestLog
+
+logger = logging.getLogger(__name__)
+
+
+def _per_request_error(e: BaseException) -> BaseException:
+    """A fresh exception object for each request of a failed batch.
+
+    ``wait()`` re-raises the stored error, and every raise rewrites the
+    instance's ``__traceback__`` — so handing all N requests the *same*
+    object lets concurrent waiters mutate it under each other.  Each
+    request gets its own copy, chained to the original (``from``) so the
+    real failure site stays in the traceback.
+    """
+    try:
+        clone = copy.copy(e)
+    except Exception:
+        clone = None
+    if clone is None or clone is e:
+        clone = RuntimeError(f"batch failed: {e!r}")
+    clone.__cause__ = e
+    return clone
 
 
 class ExecutorLane:
@@ -126,6 +153,8 @@ class ClusteringService:
         cache_entries: int = 256,
         cache_spill: bool = True,
         cache_ttl_s: Optional[float] = 3600.0,
+        wal: bool = True,
+        wal_segment_bytes: int = 4 << 20,
         registry: Optional[ParadigmRegistry] = None,
         device_budget_bytes: Optional[float] = None,
         heartbeat_timeout: float = 60.0,
@@ -171,6 +200,16 @@ class ClusteringService:
             spill_dir=(os.path.join(workdir, "cache") if cache_spill
                        else None),
             ttl_s=cache_ttl_s)
+        # write-ahead admission log: every request is durably recorded
+        # before it enters the in-memory queue, and marked consumed once
+        # its batch job's step-0 checkpoint exists — "admitted means
+        # durable".  wal=False opts out (pure-throughput deployments that
+        # accept losing queued requests on a crash).
+        self.wal: Optional[RequestLog] = (
+            RequestLog(os.path.join(workdir, "wal"),
+                       segment_bytes=wal_segment_bytes)
+            if wal else None)
+        self.executor.on_batch_durable = self._batch_durable
         self.metrics = ServiceMetrics()
         self.token = CancellationToken()
         self.poll_interval = poll_interval
@@ -235,6 +274,11 @@ class ClusteringService:
         # otherwise wait forever — no worker will ever drain it
         self._drop_undurable()
         self._fail_pending()
+        if self.wal is not None:
+            # release the append fd (a later submit/recover reopens it);
+            # a stopped service must not hold a stale handle a successor
+            # process's torn-tail truncation could race with
+            self.wal.close()
 
     # -- submission ----------------------------------------------------------
 
@@ -291,6 +335,22 @@ class ClusteringService:
             raise ValueError(
                 f"params values must be hashable (they form the batch "
                 f"compatibility key): {e}") from None
+        # the WAL persists params as JSON; a value that does not survive
+        # the roundtrip (a tuple comes back as a list, an int key as a
+        # str) would be admitted durably but rejected at replay — refuse
+        # it synchronously instead of losing it silently after a crash
+        if self.wal is not None:
+            try:
+                roundtrip = json.loads(json.dumps(req.params))
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    f"params must be JSON-serializable (the durable "
+                    f"admission log persists them as JSON): {e}") from None
+            if roundtrip != req.params:
+                raise ValueError(
+                    "params must survive a JSON roundtrip (the durable "
+                    "admission log persists them as JSON); use "
+                    "lists/scalars instead of tuples or non-string keys")
         req.cache_key = content_key(algo, req.params, data)
         cached = self.cache.get(req.cache_key)
         if cached is not None:
@@ -306,16 +366,66 @@ class ClusteringService:
                 f"request {req.request_id} was already past its deadline "
                 f"at submission"))
             return req
-        with self._lock:
-            # check-and-enqueue under the same lock stop() takes before its
-            # final drop pass, so no request can slip in behind shutdown
-            if self._stopped or self.token.cancelled():
-                req.fail(RequestDropped(
-                    "service is stopped/preempted; resubmit after restart"))
-                return req
-            self.queue.submit(req)   # raises BacklogFull at the door
-            self._inflight[req.request_id] = req
-        req.add_done_callback(self._evict_inflight)
+        if self.wal is not None:
+            # cheap screen before the durable append: a request the door
+            # would reject anyway (invalid, backlog full, rate limited)
+            # must not pay the WAL fsync — overload shedding stays an
+            # in-memory affair.  (Without a WAL there is nothing to save;
+            # queue.submit below is the one screen.)
+            self.queue.precheck(req)
+            # publish the entry id in the in-flight table BEFORE the
+            # bytes can exist on disk: a concurrent recover() filters
+            # replays against this table, and an id that became durable
+            # before becoming visible would replay as a duplicate
+            req.wal_id = self.wal.reserve_id()
+            with self._lock:
+                self._inflight[req.request_id] = req
+            # WAL first, queue second: once the caller is told the request
+            # was admitted, its payload is already durable — a crash
+            # between here and batch formation is replayed by recover().
+            # The append happens outside the service lock (it fsyncs;
+            # group commit amortises concurrent submitters onto one sync).
+            try:
+                self.wal.append_admit(
+                    tenant, algo, data, req.params, executor=executor,
+                    priority=priority, deadline=deadline,
+                    cache_key=req.cache_key, entry_id=req.wal_id)
+            except BaseException:
+                with self._lock:
+                    self._inflight.pop(req.request_id, None)
+                raise
+        try:
+            with self._lock:
+                # check-and-enqueue under the same lock stop() takes before
+                # its final drop pass, so no request can slip in behind
+                # shutdown
+                stopped = self._stopped or self.token.cancelled()
+                if stopped:
+                    self._inflight.pop(req.request_id, None)
+                else:
+                    # with a WAL, precheck above already screened and only
+                    # the locked bounds/token checks re-run (raises
+                    # BacklogFull et al.); without one this is the sole
+                    # screen
+                    self.queue.submit(req, screened=self.wal is not None)
+                    self._inflight[req.request_id] = req
+        except BaseException:
+            # rejected at the door (BacklogFull/RateLimited/validation):
+            # the caller was told "not admitted", so the entry must not
+            # replay
+            with self._lock:
+                self._inflight.pop(req.request_id, None)
+            self._wal_consume(req)
+            raise
+        if stopped:
+            # fail + consume outside the lock: both fire user-visible
+            # side effects (callbacks, a WAL fsync) no submitter or
+            # stop() should serialise behind
+            req.fail(RequestDropped(
+                "service is stopped/preempted; resubmit after restart"))
+            self._wal_consume(req)
+            return req
+        req.add_done_callback(self._request_done)
         return req
 
     # -- dispatcher ----------------------------------------------------------
@@ -354,7 +464,7 @@ class ClusteringService:
                 energy_hints=self.metrics.energy_hints())
         except KeyError as e:
             for req in batch.requests:
-                req.fail(e)
+                req.fail(_per_request_error(e))
             return
         est = estimate_work(key.algo, n, key.features, batch.size, params)
         lane = min((self.lanes[name] for name in names
@@ -385,7 +495,7 @@ class ClusteringService:
                         req.fail(RequestDropped(
                             f"request {req.request_id} was queued on lane "
                             f"{lane.name} when the service was preempted; "
-                            f"resubmit"))
+                            f"recover() will replay it", resubmit=True))
                     continue
                 ran = True
                 self._run_batch(batch, lane.name)
@@ -398,8 +508,11 @@ class ClusteringService:
                 batch, token=self.token, executor=executor,
                 energy_hints=self.metrics.energy_hints())
         except BaseException as e:
+            # each request gets its own exception object: concurrent
+            # wait() callers re-raise, and a raise mutates the instance's
+            # __traceback__ — sharing one across threads races
             for req in batch.requests:
-                req.fail(e)
+                req.fail(_per_request_error(e))
             return
         try:
             self._absorb(batch.requests, outcome)
@@ -408,7 +521,7 @@ class ClusteringService:
             # lane worker: fail whatever did not resolve and keep serving
             for req in batch.requests:
                 if not req.done():
-                    req.fail(e)
+                    req.fail(_per_request_error(e))
 
     @staticmethod
     def _ewma_work(outcome: BatchOutcome) -> float:
@@ -443,17 +556,58 @@ class ClusteringService:
                 latency_s=req.latency or 0.0,
                 queue_wait_s=req.queue_wait or 0.0)
 
-    def _evict_inflight(self, req: MiningRequest) -> None:
+    # -- WAL bookkeeping -----------------------------------------------------
+
+    def _wal_consume(self, req: MiningRequest,
+                     job_id: Optional[int] = None) -> None:
+        """Best-effort consume of one request's WAL entry (idempotent)."""
+        if self.wal is None or req.wal_id is None:
+            return
+        try:
+            self.wal.mark_consumed([req.wal_id], job_id=job_id)
+        except Exception:
+            logger.exception("wal consume failed for request %d",
+                             req.request_id)
+
+    def _batch_durable(self, job_id: int,
+                       requests: List[MiningRequest]) -> None:
+        """Executor hook: the batch's step-0 checkpoint exists, so the job
+        record now carries durability — the admission-log entries are done."""
+        if self.wal is None:
+            return
+        ids = [r.wal_id for r in requests if r.wal_id is not None]
+        if not ids:
+            return
+        try:
+            self.wal.mark_consumed(ids, job_id=job_id)
+        except Exception:
+            logger.exception("wal consume failed for job %d", job_id)
+
+    def _request_done(self, req: MiningRequest) -> None:
         with self._lock:
             self._inflight.pop(req.request_id, None)
+        if self.wal is None or req.wal_id is None:
+            return
+        err = req.exception(timeout=0)
+        if err is not None and getattr(err, "resubmit", False):
+            # dropped by shutdown/preemption, not by the request itself:
+            # the entry stays live so recover() replays it after restart
+            return
+        # resolved, cancelled, expired, or failed terminally — no replay
+        # wanted.  For batch-completed requests this is a no-op (consumed
+        # at step-0 already).
+        self._wal_consume(req, job_id=req.job_id)
 
     def _drop_undurable(self) -> None:
-        """Preempted before batching: these requests never became durable."""
+        """Preempted before batching: fail the handles (they die with this
+        process) — but their WAL entries stay live, so recover() replays
+        them after restart instead of losing them."""
         for batch in self.batcher.flush_all():
             for req in batch.requests:
                 req.fail(RequestDropped(
                     f"request {req.request_id} was still queued when the "
-                    f"service was preempted; resubmit"))
+                    f"service was preempted; recover() will replay it",
+                    resubmit=True))
 
     def _fail_pending(self) -> None:
         """Shutdown backstop: no handle may dangle after stop() returns.
@@ -469,7 +623,8 @@ class ClusteringService:
             if not req.done():
                 req.fail(RequestDropped(
                     f"request {req.request_id} was still pending when the "
-                    f"service stopped; resubmit"))
+                    f"service stopped; recover() will replay it",
+                    resubmit=True))
 
     # -- restart path --------------------------------------------------------
 
@@ -492,6 +647,91 @@ class ClusteringService:
                         self.cache.put(ckey, result)
         return outcomes
 
+    def recover(self) -> Dict[str, Any]:
+        """Full restart path: resume suspended batches, then replay every
+        admitted-but-unbatched request from the write-ahead admission log.
+
+        Call on a **started** service over the dead process's workdir.
+        First :meth:`resume_suspended` completes batches that were already
+        durable as jobs; then each unconsumed WAL entry is resubmitted
+        through the normal front door — a replay whose content hash is
+        already in the result cache (the work completed before the crash,
+        or an earlier replay finished it) resolves instantly without
+        touching a device.  The old entry is marked consumed only after
+        the resubmission is durable under a fresh entry, so a crash
+        *during* recovery at worst replays twice, never zero times.
+
+        Returns a summary: ``outcomes`` (resumed batch results),
+        ``requests`` (handles for the replayed submissions — wait on them
+        to drive the replay to completion), and counters
+        (``resumed_batches`` / ``replayed`` / ``cache_hits`` /
+        ``rejected``).  A replay bounced by *transient* door pressure
+        (``BacklogFull``/``RateLimited``) keeps its entry live for a
+        later ``recover()``; only poisoned entries that can never admit
+        are consumed on rejection.
+        """
+        outcomes = self.resume_suspended()
+        handles: List[MiningRequest] = []
+        replayed = cache_hits = rejected = 0
+        if self.wal is not None:
+            records = self.wal.replay()
+            # entries backing requests still alive in THIS process must
+            # not replay — they are already queued/staged here, and a
+            # second submission would run them twice.  The snapshot is
+            # taken AFTER the log read: ids are published to _inflight
+            # before their bytes can exist on disk (_submit reserves
+            # first), so any entry replay() saw is already visible here.
+            with self._lock:
+                inflight_ids = {r.wal_id for r in self._inflight.values()
+                                if r.wal_id is not None}
+            # old entries are consumed in chunks AFTER their resubmissions
+            # are durable under fresh entries: per-entry consumes would
+            # pay a serial fsync each (2N syncs for N replays); chunking
+            # keeps recovery ~N syncs at the cost of a bounded
+            # at-least-once window if recovery itself crashes mid-chunk
+            done_ids: List[int] = []
+
+            def flush_consumed(force: bool = False) -> None:
+                if done_ids and (force or len(done_ids) >= 32):
+                    self.wal.mark_consumed(done_ids)
+                    done_ids.clear()
+
+            for rec in records:
+                if rec.entry_id in inflight_ids:
+                    continue
+                try:
+                    req = self._submit(
+                        rec.tenant, rec.algo, rec.data, params=rec.params,
+                        executor=rec.executor, priority=rec.priority,
+                        deadline=rec.deadline)
+                except (BacklogFull, RateLimited):
+                    # transient door pressure: keep the entry live — a
+                    # later recover() re-offers it instead of losing it
+                    rejected += 1
+                    continue
+                except Exception:
+                    # poisoned entry (validation/too-large): replaying it
+                    # again can never succeed, so consume it
+                    rejected += 1
+                    done_ids.append(rec.entry_id)
+                else:
+                    replayed += 1
+                    if req.cache_hit:
+                        cache_hits += 1
+                    handles.append(req)
+                    done_ids.append(rec.entry_id)
+                flush_consumed()
+            flush_consumed(force=True)
+            self.wal.compact()
+        return {
+            "outcomes": outcomes,
+            "requests": handles,
+            "resumed_batches": len(outcomes),
+            "replayed": replayed,
+            "cache_hits": cache_hits,
+            "rejected": rejected,
+        }
+
     def metrics_snapshot(self) -> Dict[str, Any]:
         snap = self.metrics.snapshot()
         snap["cache"] = self.cache.stats()
@@ -502,4 +742,5 @@ class ClusteringService:
         snap["queue_too_large"] = self.queue.too_large_rejected
         snap["lanes"] = {name: lane.stats()
                          for name, lane in self.lanes.items()}
+        snap["wal"] = self.wal.stats() if self.wal is not None else None
         return snap
