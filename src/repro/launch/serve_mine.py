@@ -13,7 +13,9 @@ admitted-but-unbatched request from the write-ahead admission log, so a
 ``kill -9`` at any moment loses nothing that was admitted.  ``--oversized N`` mixes in N requests larger than
 the per-device memory budget (``--device-budget-mb``): the cost model
 routes them to the ``distributed`` lane, which shards each across every
-local device.
+local device.  ``--bucket-policy`` picks how batch shapes are padded
+(``pow2`` / ``linear[:STEP]`` / ``adaptive``, the self-tuning default —
+see ``docs/bucketing_study.md``).
 
     PYTHONPATH=src python -m repro.launch.serve_mine --workdir /tmp/svc \
         --requests 32 --tenants 4 --rate 100 --algo mixed --executor auto
@@ -122,7 +124,8 @@ def drive(client: MiningClient, workload, rate: float,
     return failures
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface (separate so the docs gate can introspect it)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--workdir", default="/tmp/repro_serve_mine")
     ap.add_argument("--requests", type=int, default=32)
@@ -151,6 +154,12 @@ def main() -> None:
                          "(default: fraction of the discovered chip's HBM)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--bucket-policy", default="adaptive",
+                    help="batch-shape bucket policy: 'pow2', "
+                         "'linear[:STEP]', or 'adaptive[:MAX_BUCKETS"
+                         "[:REFIT_EVERY]]' (default: adaptive — behaves "
+                         "like pow2 until fitted; see "
+                         "docs/bucketing_study.md)")
     ap.add_argument("--ttl", type=float, default=None,
                     help="per-request deadline, seconds from submit")
     ap.add_argument("--resume", action="store_true",
@@ -160,13 +169,18 @@ def main() -> None:
                          "replay admitted-but-unbatched requests from the "
                          "write-ahead admission log (admitted means "
                          "durable; implies --resume)")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     backend_mod.load()
     service = ClusteringService(
         args.workdir,
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1000.0,
+        bucket_policy=args.bucket_policy,
         device_budget_bytes=(None if args.device_budget_mb is None
                              else args.device_budget_mb * 2**20),
     )
@@ -208,11 +222,15 @@ def main() -> None:
     print(json.dumps(snap, indent=2, default=str))
     lanes = {name: f"{st['busy_s']:.3f}s/{st['batches']}b"
              for name, st in snap["lanes"].items() if st["batches"]}
+    bkt = snap["bucketing"]
     print(f"# {snap['requests']} requests, "
           f"p50 {snap['p50_latency_s'] * 1e3:.1f}ms / "
           f"p99 {snap['p99_latency_s'] * 1e3:.1f}ms, "
           f"occupancy {snap['mean_occupancy']:.2f}, "
           f"lanes {lanes}, failures {failures}")
+    print(f"# bucketing [{bkt['policy']['name']}]: "
+          f"padding waste {bkt['padding_waste']:.2%}, "
+          f"{bkt['recompiles']} compiled shape(s)")
 
 
 if __name__ == "__main__":

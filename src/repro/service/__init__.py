@@ -26,6 +26,8 @@ estimates are decided (and persisted) before any data moves.
                 per-tenant token-bucket rate limits
     batcher   — micro-batching: coalesce + pad + max-wait deadline;
                 oversized requests bypass into singleton sharded batches
+    bucketing — pluggable batch-shape bucket policies (pow2 / linear /
+                adaptive autotuner fitted to observed request shapes)
     dispatch  — paradigm registry + plan/execute cost model
                 (pallas-kernel/jax-ref/numpy-mt/distributed)
     executor  — durable batch execution: jobs + checkpoints + resume
@@ -38,6 +40,13 @@ estimates are decided (and persisted) before any data moves.
 """
 
 from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
+from repro.service.bucketing import (
+    AdaptivePolicy,
+    BucketPolicy,
+    LinearPolicy,
+    Pow2Policy,
+    make_policy,
+)
 from repro.service.cache import ResultCache, content_key
 from repro.service.client import MiningClient, ResultHandle
 from repro.service.dispatch import (
@@ -66,13 +75,15 @@ from repro.service.queue import (
 )
 from repro.service.service import ClusteringService, ExecutorLane
 from repro.service.session import StreamingSession
-from repro.service.wal import RequestLog, WalRecord
+from repro.service.wal import RequestLog, WalLocked, WalRecord
 
 __all__ = [
+    "AdaptivePolicy",
     "AdmissionQueue",
     "BacklogFull",
     "BatchExecutor",
     "BatchKey",
+    "BucketPolicy",
     "BatchOutcome",
     "ClusteringService",
     "EXECUTOR_DISTRIBUTED",
@@ -82,6 +93,7 @@ __all__ = [
     "ExecutionPlan",
     "ExecutorLane",
     "JobSuspended",
+    "LinearPolicy",
     "MicroBatch",
     "MicroBatcher",
     "MiningClient",
@@ -90,16 +102,19 @@ __all__ = [
     "PRIORITY_INTERACTIVE",
     "PRIORITY_NORMAL",
     "ParadigmRegistry",
+    "Pow2Policy",
     "RateLimited",
     "RequestCancelled",
     "RequestDropped",
     "RequestLog",
     "RequestTooLarge",
     "ResultCache",
+    "WalLocked",
     "WalRecord",
     "ResultHandle",
     "ServiceMetrics",
     "StreamingSession",
     "content_key",
     "default_registry",
+    "make_policy",
 ]

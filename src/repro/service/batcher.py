@@ -2,10 +2,14 @@
 
 Compatible means *same compiled program*: same algorithm, feature dimension,
 and algorithm parameters (eps/min_pts for DBSCAN, k/init/tol for K-Means).
-Items inside a batch are padded to a shared power-of-two point-count bucket,
-so every batch with the same key and bucket reuses one jitted executable —
-the service amortises XLA compilation (the paper's dominant GPU "setup
-time", Fig. 6) across requests instead of paying it per request.
+Items inside a batch are padded to a shared point-count bucket chosen by a
+pluggable :class:`~repro.service.bucketing.BucketPolicy` (default: the next
+power of two), so every batch with the same key and bucket reuses one jitted
+executable — the service amortises XLA compilation (the paper's dominant GPU
+"setup time", Fig. 6) across requests instead of paying it per request.  The
+policy also *observes* every drained request's shape, which is how the
+``adaptive`` policy learns its bucket edges from live traffic (see
+``docs/bucketing_study.md`` for the measured policy comparison).
 
 Flush policy: a staged group is emitted when it reaches ``max_batch``
 requests (occupancy 1.0) or when its oldest request has waited
@@ -27,6 +31,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.service.bucketing import BucketPolicy, Pow2Policy, pow2_bucket
 from repro.service.queue import (
     AdmissionQueue,
     MiningRequest,
@@ -63,11 +68,14 @@ class BatchKey:
 
 
 def bucket_points(n: int, minimum: int = 8) -> int:
-    """Next power-of-two >= n: pad shapes recur, so compiles are reused."""
-    b = minimum
-    while b < n:
-        b <<= 1
-    return b
+    """Next power-of-two >= n: pad shapes recur, so compiles are reused.
+
+    This is the *default* (and historical) bucket; the batcher itself pads
+    through its :class:`~repro.service.bucketing.BucketPolicy`.  Kept as a
+    module function because it is also the conservative shape estimate used
+    where no policy is in scope (e.g. the device-budget check's default).
+    """
+    return pow2_bucket(n, minimum)
 
 
 _BATCH_IDS = itertools.count(1)
@@ -81,6 +89,7 @@ class MicroBatch:
     created: float = dataclasses.field(default_factory=time.time)
     batch_id: int = dataclasses.field(default_factory=lambda: next(_BATCH_IDS))
     oversized: bool = False       # singleton over the per-device budget
+    n_pad: Optional[int] = None   # policy bucket, set at formation time
 
     @property
     def size(self) -> int:
@@ -93,7 +102,12 @@ class MicroBatch:
 
     @property
     def n_max(self) -> int:
-        """Shared padded point-count bucket for every item."""
+        """Shared padded point-count bucket for every item.
+
+        Set by the batcher's bucket policy at formation; a batch built by
+        hand (tests) falls back to the pow2 default."""
+        if self.n_pad is not None:
+            return self.n_pad
         return bucket_points(max(r.n_points for r in self.requests))
 
     @property
@@ -112,13 +126,26 @@ class MicroBatcher:
         max_batch: int = 8,
         max_wait_s: float = 0.02,
         oversized: Optional[Callable[[MiningRequest], bool]] = None,
+        bucket_policy: Optional[BucketPolicy] = None,
     ) -> None:
         self.queue = queue
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.oversized = oversized
+        self.policy = bucket_policy if bucket_policy is not None \
+            else Pow2Policy()
         self._lock = threading.Lock()
         self._staged: Dict[BatchKey, List[MiningRequest]] = {}
+
+    def _bucket(self, requests: List[MiningRequest]) -> int:
+        """Padded point count for a batch, from the policy (pow2 on a
+        failing policy — a bad fit must degrade padding, not drop work)."""
+        n = max(r.n_points for r in requests)
+        try:
+            b = int(self.policy.bucket(n))
+        except Exception:
+            return bucket_points(n)
+        return b if b >= n else bucket_points(n)
 
     def pending(self) -> int:
         with self._lock:
@@ -142,7 +169,8 @@ class MicroBatcher:
             del self._staged[key]
         if not take:
             return None
-        return MicroBatch(key=key, requests=take, capacity=self.max_batch)
+        return MicroBatch(key=key, requests=take, capacity=self.max_batch,
+                          n_pad=self._bucket(take))
 
     def _prune(self, now: float) -> List[MiningRequest]:
         """Drop cancelled/expired requests from the staged groups so they
@@ -194,8 +222,22 @@ class MicroBatcher:
             elif req.claim_for_batch(now):
                 singles.append(MicroBatch(
                     key=BatchKey.for_request(req), requests=[req],
-                    capacity=1, oversized=True))
+                    capacity=1, oversized=True,
+                    n_pad=self._bucket([req])))
         return normal, singles
+
+    def _observe(self, shapes: List[int]) -> None:
+        """Feed the drained shapes to the bucket policy (how the adaptive
+        policy learns its edges).  Called AFTER this cycle's batches are
+        formed: an observation can trigger a re-fit, and the fit must
+        never delay the batches already in hand (it only informs future
+        cycles anyway).  Policies must never take the dispatch loop down.
+        """
+        for n in shapes:
+            try:
+                self.policy.observe(n)
+            except Exception:
+                pass
 
     def _keys_by_priority(self) -> List[BatchKey]:
         """Staged groups ordered most-urgent-first, so priority carries
@@ -217,6 +259,7 @@ class MicroBatcher:
         # drain outside the batcher lock: expired requests fail inside
         # drain(), and completion callbacks must never run under our lock
         drained = self.queue.drain(now=now)
+        shapes = [r.n_points for r in drained]
         drained, batches = self._bypass_oversized(drained, now)
         with self._lock:
             self._stage(drained)
@@ -231,12 +274,14 @@ class MicroBatcher:
                     if batch is not None:
                         batches.append(batch)
         self._fail_expired(dead)
+        self._observe(shapes)
         return batches
 
     def flush_all(self, now: Optional[float] = None) -> List[MicroBatch]:
         """Emit everything staged regardless of deadline (shutdown drain)."""
         now = time.time() if now is None else now
         drained = self.queue.drain(now=now)
+        shapes = [r.n_points for r in drained]
         drained, batches = self._bypass_oversized(drained, now)
         with self._lock:
             self._stage(drained)
@@ -247,4 +292,5 @@ class MicroBatcher:
                     if batch is not None:
                         batches.append(batch)
         self._fail_expired(dead)
+        self._observe(shapes)
         return batches

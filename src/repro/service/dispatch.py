@@ -705,16 +705,24 @@ class ParadigmRegistry:
         return DEVICE_BUDGET_FRACTION * chip.hbm_bytes
 
     def oversized(self, algo: str, n: int, d: int,
-                  params: Dict[str, Any]) -> bool:
+                  params: Dict[str, Any],
+                  bucket: Optional[Callable[[int], int]] = None) -> bool:
         """Does one request's working set exceed the per-device budget?
 
-        The budget is judged at the batcher's pow2 bucket, not the raw
-        point count — execution pads to the bucket, and for DBSCAN the
-        (n_max, n_max) intermediate makes that up to a 4x difference.
+        The budget is judged at the *bucket* the request will pad to, not
+        the raw point count — execution pads to the bucket, and for
+        DBSCAN the (n_max, n_max) intermediate makes that up to a 4x
+        difference.  ``bucket`` should be the owning service's policy
+        view (its ``bucket_ceiling`` for admission screens, or an
+        already-padded ``n`` with the identity-on-buckets ``bucket``).
+        The pow2 default is exact for the ``pow2`` policy and an upper
+        bound for ``adaptive`` (whose buckets are clamped at pow2), but
+        it UNDER-prices a linear policy whose step exceeds the pow2
+        bucket — such callers must pass their own ``bucket``.
         """
-        from repro.service.batcher import bucket_points
+        from repro.service.bucketing import pow2_bucket
 
-        n_max = bucket_points(n)
+        n_max = (bucket or pow2_bucket)(n)
         return (estimate_item_bytes(algo, n_max, d, params)
                 > self.budget_bytes())
 
@@ -729,11 +737,13 @@ class ParadigmRegistry:
         params: Dict[str, Any],
         explicit: Optional[str] = None,
         energy_hints: Optional[Dict[str, float]] = None,
+        bucket: Optional[Callable[[int], int]] = None,
     ) -> str:
         """Cost-model dispatch (explicit override wins, and is validated)."""
         return self.candidates(algo, n, d, batch_size, params,
                                explicit=explicit,
-                               energy_hints=energy_hints)[0]
+                               energy_hints=energy_hints,
+                               bucket=bucket)[0]
 
     def candidates(
         self,
@@ -744,6 +754,7 @@ class ParadigmRegistry:
         params: Dict[str, Any],
         explicit: Optional[str] = None,
         energy_hints: Optional[Dict[str, float]] = None,
+        bucket: Optional[Callable[[int], int]] = None,
     ) -> List[str]:
         """Compatible executors in cost-model preference order.
 
@@ -757,13 +768,15 @@ class ParadigmRegistry:
         ``energy_hints`` (EWMA modeled joules per unit work, from
         :class:`repro.service.metrics.ServiceMetrics`) tie-break the
         accelerated candidates toward the cheaper paradigm — the paper's
-        Fig. 9 energy comparison closed into a control loop.
+        Fig. 9 energy comparison closed into a control loop.  ``bucket``
+        (the service's bucket policy) decides the padded shape the budget
+        check prices; pow2 by default.
         """
         if explicit is not None:
             self.get(explicit)
             return [explicit]
         if (EXECUTOR_DISTRIBUTED in self._paradigms
-                and self.oversized(algo, n, d, params)):
+                and self.oversized(algo, n, d, params, bucket=bucket)):
             return [EXECUTOR_DISTRIBUTED]
         # the distributed lane exists *for* oversized requests; it never
         # competes for work that fits one device

@@ -63,6 +63,13 @@ class BatchOutcome:
     results: Optional[List[Dict[str, Any]]] = None  # per item, when complete
     cache_keys: Optional[List[str]] = None          # per item content hashes
     plan: Optional[Dict[str, Any]] = None           # ExecutionPlan.summary()
+    lengths: Optional[List[int]] = None             # per item real points
+
+    @property
+    def real_points(self) -> int:
+        """Sum of real (pre-padding) item lengths — the numerator of the
+        batch's point occupancy; ``size * n_max`` is the denominator."""
+        return sum(self.lengths or [])
 
 
 def _pad_item(x: np.ndarray, n_max: int, algo: str, eps: float,
@@ -132,13 +139,19 @@ class BatchExecutor:
         if executor is not None:
             self.registry.get(executor)   # validate the pinned lane
         else:
+            # the cost model prices the *padded* shape — n_max is what the
+            # paradigm will actually compile and execute, not the raw max.
+            # It is already the final bucket, so the budget check inside
+            # select must take it verbatim (identity), not re-round it up
+            # another pow2 window
             executor = self.registry.select(
                 key.algo,
-                n=max(r.n_points for r in batch.requests),
+                n=batch.n_max,
                 d=key.features,
                 batch_size=batch.size,
                 params=params,
                 explicit=key.executor,
+                bucket=lambda n: n,
             )
         n_max, d = batch.n_max, key.features
         size = batch.size
@@ -337,6 +350,7 @@ class BatchExecutor:
             request_ids=list(jp["request_ids"]), tenants=list(jp["tenants"]),
             cache_keys=list(jp.get("cache_keys") or []),
             plan=plan.summary(),
+            lengths=[int(x) for x in jp["lengths"]],
         )
         if outcome.suspended:
             with lock:

@@ -21,7 +21,7 @@ import dataclasses
 import math
 import threading
 from collections import defaultdict, deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 # Same constant as benchmarks/energy.py (tablet-class active power, W).
 P_ACTIVE_WATTS = 3.0
@@ -64,10 +64,16 @@ class BatchRecord:
     n_max: int
     exec_s: float
     resumed: bool
+    real_points: int = 0       # sum of item lengths (0 = not reported)
 
     @property
     def occupancy(self) -> float:
         return self.size / max(1, self.capacity)
+
+    @property
+    def padded_points(self) -> int:
+        """Points actually allocated/computed: every item pads to n_max."""
+        return self.size * self.n_max
 
     @property
     def modeled_joules(self) -> float:
@@ -93,6 +99,15 @@ class ServiceMetrics:
         self.total_joules = 0.0
         # executor -> EWMA modeled joules per unit work (the dispatch hint)
         self._joules_per_work: Dict[str, float] = {}
+        # -- bucketing scorecard (lifetime) ---------------------------------
+        # real vs padded points executed, and the distinct compiled-program
+        # shapes seen: each fresh (executor, algo, features, n_max) combo
+        # is a jit compile the executable cache must hold — the recompile
+        # axis of the bucketing tradeoff (padding waste vs cache misses)
+        self.total_real_points = 0
+        self.total_padded_points = 0
+        self._compiled_shapes: Set[Tuple[str, str, int, int]] = set()
+        self.recompiles = 0
 
     def record_request(
         self,
@@ -125,14 +140,24 @@ class ServiceMetrics:
         exec_s: float,
         resumed: bool = False,
         work: float = 0.0,
+        real_points: int = 0,
+        features: int = 0,
     ) -> None:
         with self._lock:
             self._batches.append(BatchRecord(
                 algo=algo, executor=executor, size=size, capacity=capacity,
                 n_max=n_max, exec_s=exec_s, resumed=resumed,
+                real_points=int(real_points),
             ))
             self.total_batches += 1
             self.total_joules += P_ACTIVE_WATTS * exec_s
+            if real_points > 0:
+                self.total_real_points += int(real_points)
+                self.total_padded_points += int(size) * int(n_max)
+            shape = (executor, algo, int(features), int(n_max))
+            if shape not in self._compiled_shapes:
+                self._compiled_shapes.add(shape)
+                self.recompiles += 1
             if resumed:
                 self.resumed_batches += 1
             if work > 0.0 and exec_s > 0.0:
@@ -165,6 +190,9 @@ class ServiceMetrics:
                 "batches": self.total_batches,
                 "modeled_joules": self.total_joules,
             }
+            real_pts = self.total_real_points
+            padded_pts = self.total_padded_points
+            recompiles = self.recompiles
 
         latencies = [r.latency_s for r in requests]
         waits = [r.queue_wait_s for r in requests]
@@ -190,8 +218,24 @@ class ServiceMetrics:
                 "joules_per_work": jpw.get(name),
             }
 
+        by_bucket: Dict[str, int] = defaultdict(int)
+        for b in batches:
+            by_bucket[str(b.n_max)] += 1
+        bucketing = {
+            # lifetime counters (the per-batch window backs by_bucket only)
+            "real_points": real_pts,
+            "padded_points": padded_pts,
+            "padding_waste": (1.0 - real_pts / padded_pts
+                              if padded_pts else 0.0),
+            "point_occupancy": (real_pts / padded_pts
+                                if padded_pts else 0.0),
+            "recompiles": recompiles,
+            "by_bucket": dict(by_bucket),
+        }
+
         return {
             "totals": totals,           # lifetime; the rest is window-local
+            "bucketing": bucketing,
             "requests": len(requests),
             "cache_hits": sum(1 for r in requests if r.cache_hit),
             "p50_latency_s": percentile(latencies, 50),

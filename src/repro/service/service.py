@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.cancellation import CancellationToken, CancelReason
 from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
+from repro.service.bucketing import BucketPolicy, make_policy
 from repro.service.cache import ResultCache, content_key
 from repro.service.dispatch import (
     EXECUTOR_DISTRIBUTED,
@@ -146,6 +147,7 @@ class ClusteringService:
         *,
         max_batch: int = 8,
         max_wait_s: float = 0.02,
+        bucket_policy: "str | BucketPolicy | None" = "adaptive",
         max_backlog: int = 256,
         max_per_tenant: int = 64,
         tenant_rate: Optional[float] = None,
@@ -183,9 +185,16 @@ class ClusteringService:
             tenant_rate=tenant_rate,
             tenant_burst=tenant_burst,
             too_large=None if can_shard else self._req_oversized)
+        # batch-shape bucketing: how far each batch pads, and therefore how
+        # many distinct executables the jit cache holds.  "adaptive" (the
+        # default; see docs/bucketing_study.md) behaves exactly like the
+        # historical pow2 policy until it has observed enough traffic to
+        # fit tighter edges.
+        self.bucket_policy: BucketPolicy = make_policy(bucket_policy)
         self.batcher = MicroBatcher(
             self.queue, max_batch=max_batch, max_wait_s=max_wait_s,
-            oversized=self._req_oversized if can_shard else None)
+            oversized=self._req_oversized if can_shard else None,
+            bucket_policy=self.bucket_policy)
         self.executor = BatchExecutor(
             workdir,
             registry=registry,
@@ -221,9 +230,15 @@ class ClusteringService:
         self._dispatcher: Optional[threading.Thread] = None
 
     def _req_oversized(self, req: MiningRequest) -> bool:
-        """Does one request's working set exceed the per-device budget?"""
+        """Does one request's working set exceed the per-device budget?
+
+        Judged at the bucket *ceiling* — the largest shape the policy may
+        ever pad this request to — not the current bucket: a self-tuning
+        policy can re-fit between this screen and batch formation, and a
+        request admitted as in-budget must stay in-budget at execution."""
         return self.registry.oversized(
-            req.algo, req.n_points, req.features, req.params)
+            req.algo, req.n_points, req.features, req.params,
+            bucket=self.bucket_policy.bucket_ceiling)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -453,20 +468,32 @@ class ClusteringService:
             lane.put_sentinel()
 
     def _assign(self, batch: MicroBatch) -> None:
-        """Route a formed batch to the least-loaded compatible lane."""
+        """Route a formed batch to the least-loaded compatible lane.
+
+        Costing uses the *padded* shape (the batch's bucket): that is what
+        the paradigm compiles and executes, so the lane-load account and
+        the plan's own cost estimate price the same work."""
         key = batch.key
         params = key.params_dict
-        n = max(r.n_points for r in batch.requests)
+        n_pad = batch.n_max
         try:
+            # n_pad is the batch's final padded shape (the batcher already
+            # applied the policy), so the budget check inside candidates
+            # must price it verbatim — identity, not another bucketing pass
             names = self.registry.candidates(
-                key.algo, n=n, d=key.features, batch_size=batch.size,
+                key.algo, n=n_pad, d=key.features, batch_size=batch.size,
                 params=params, explicit=key.executor,
-                energy_hints=self.metrics.energy_hints())
-        except KeyError as e:
+                energy_hints=self.metrics.energy_hints(),
+                bucket=lambda n: n)
+        except Exception as e:
+            # unknown executor, poisoned params, a failing cost model —
+            # whatever it is, it fails THIS batch's requests; it must
+            # never take the dispatcher thread (and the service) down
             for req in batch.requests:
                 req.fail(_per_request_error(e))
             return
-        est = estimate_work(key.algo, n, key.features, batch.size, params)
+        est = estimate_work(key.algo, n_pad, key.features, batch.size,
+                            params)
         lane = min((self.lanes[name] for name in names
                     if name in self.lanes),
                    key=lambda ln: ln.load, default=None)
@@ -540,7 +567,9 @@ class ClusteringService:
             algo=outcome.algo, executor=outcome.executor, size=outcome.size,
             capacity=outcome.capacity, n_max=outcome.n_max,
             exec_s=outcome.exec_s, resumed=outcome.resumed,
-            work=self._ewma_work(outcome))
+            work=self._ewma_work(outcome),
+            real_points=outcome.real_points,
+            features=int((outcome.plan or {}).get("features", 0)))
         if outcome.suspended:
             self.metrics.record_suspended()
             for req in requests:
@@ -640,7 +669,9 @@ class ClusteringService:
                 algo=outcome.algo, executor=outcome.executor,
                 size=outcome.size, capacity=outcome.capacity,
                 n_max=outcome.n_max, exec_s=outcome.exec_s, resumed=True,
-                work=self._ewma_work(outcome))
+                work=self._ewma_work(outcome),
+                real_points=outcome.real_points,
+                features=int((outcome.plan or {}).get("features", 0)))
             if outcome.results and outcome.cache_keys:
                 for ckey, result in zip(outcome.cache_keys, outcome.results):
                     if ckey:
@@ -734,6 +765,10 @@ class ClusteringService:
 
     def metrics_snapshot(self) -> Dict[str, Any]:
         snap = self.metrics.snapshot()
+        # the metrics object counts padding/recompiles; the policy itself
+        # carries the edges/refit state — one block tells the whole
+        # bucketing story (see docs/OPERATIONS.md for the field glossary)
+        snap["bucketing"]["policy"] = self.bucket_policy.snapshot()
         snap["cache"] = self.cache.stats()
         snap["queue_depth"] = len(self.queue)
         snap["queue_rejected"] = self.queue.rejected

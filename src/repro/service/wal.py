@@ -56,7 +56,36 @@ from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+try:                               # POSIX only; the lock degrades to a
+    import fcntl                   # no-op where record locks don't exist
+except ImportError:                # pragma: no cover - non-POSIX hosts
+    fcntl = None
+
 logger = logging.getLogger(__name__)
+
+LOCK_FILENAME = "LOCK"
+
+
+class WalLocked(RuntimeError):
+    """Another *process* already owns this admission log.
+
+    Two services appending the same segments would interleave frames and
+    corrupt each other's records, so the log takes a POSIX record lock
+    (``fcntl.lockf``) on ``<root>/LOCK`` for as long as it is open.  The
+    error is structured: ``root`` is the contested log directory and
+    ``holder_pid`` the owner recorded in the lockfile (best-effort — the
+    kernel enforces the lock, the pid is diagnostics).
+
+    The lock is per-process (POSIX semantics): sequential services inside
+    one process hand over freely — same as the ``jobs.db`` assumption —
+    while a second *process* gets this error instead of silent corruption.
+    """
+
+    def __init__(self, message: str, *, root: str,
+                 holder_pid: Optional[int] = None) -> None:
+        super().__init__(message)
+        self.root = root
+        self.holder_pid = holder_pid
 
 # record framing: magic u32 | type u8 | header_len u32 | data_len u64 |
 # crc32(header+data) u32
@@ -141,7 +170,84 @@ class RequestLog:
         self.fsyncs = 0
         self.appended = 0          # ADMIT records written by this process
         self.compacted_segments = 0
+        self._lock_key: Optional[str] = None
+        self._acquire_lock()
         self._open()
+
+    # -- cross-process exclusivity ----------------------------------------------
+
+    # one OS-level record lock per root per PROCESS, refcounted across the
+    # RequestLog instances of this process.  POSIX record locks have the
+    # classic footgun that closing ANY fd for the locked file drops the
+    # whole process's lock — so a second in-process log (sequential
+    # services over one workdir, an inspection helper) must share the one
+    # locked fd instead of opening its own, or its close() would silently
+    # let another process in while the first log still appends.
+    _proc_locks: Dict[str, List[Any]] = {}       # realpath -> [fd, refcount]
+    _proc_locks_guard = threading.Lock()
+
+    def _acquire_lock(self) -> None:
+        """Take (or share) the single-writer lock on ``<root>/LOCK``.
+
+        Raises :class:`WalLocked` when another *process* holds it.  Held
+        for as long as any log of this process has the root open;
+        :meth:`close` releases this instance's share (and process death
+        releases everything — which is exactly what lets ``recover()``
+        open a dead process's log).
+        """
+        if fcntl is None:          # pragma: no cover - non-POSIX hosts
+            return
+        key = os.path.realpath(self.root)
+        with RequestLog._proc_locks_guard:
+            entry = RequestLog._proc_locks.get(key)
+            if entry is not None:
+                entry[1] += 1
+                self._lock_key = key
+                return
+            path = os.path.join(self.root, LOCK_FILENAME)
+            fd = os.open(path, os.O_CREAT | os.O_RDWR, 0o644)
+            try:
+                fcntl.lockf(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+            except OSError:
+                holder: Optional[int] = None
+                try:
+                    raw = os.pread(fd, 64, 0).split()
+                    holder = int(raw[0]) if raw else None
+                except (OSError, ValueError):
+                    pass
+                os.close(fd)
+                raise WalLocked(
+                    f"admission log {self.root!r} is already open for "
+                    f"append in another process"
+                    + (f" (pid {holder})" if holder else "")
+                    + "; one writer per workdir — stop the other service "
+                      "or use a different workdir",
+                    root=self.root, holder_pid=holder) from None
+            os.ftruncate(fd, 0)
+            os.pwrite(fd, f"{os.getpid()}\n".encode(), 0)
+            RequestLog._proc_locks[key] = [fd, 1]
+            self._lock_key = key
+
+    def _release_lock(self) -> None:
+        if self._lock_key is None:
+            return
+        key, self._lock_key = self._lock_key, None
+        with RequestLog._proc_locks_guard:
+            entry = RequestLog._proc_locks.get(key)
+            if entry is None:      # pragma: no cover - double release
+                return
+            entry[1] -= 1
+            if entry[1] > 0:
+                return             # another in-process log still holds it
+            del RequestLog._proc_locks[key]
+            fd = entry[0]
+        try:
+            if fcntl is not None:
+                fcntl.lockf(fd, fcntl.LOCK_UN)
+        except OSError:            # pragma: no cover - lock already gone
+            pass
+        finally:
+            os.close(fd)
 
     # -- segments --------------------------------------------------------------
 
@@ -274,7 +380,12 @@ class RequestLog:
         with self._lock:
             if self._file is None:
                 # closed (service stop()): reopen the active segment — the
-                # index is still in memory, only the fd was released
+                # index is still in memory, only the fd (and the writer
+                # lock) was released.  Re-acquiring may raise WalLocked if
+                # another process took over the workdir in between; that
+                # is the correct answer (this log must not append).
+                if self._lock_key is None:
+                    self._acquire_lock()
                 path = self._seg_path(self._seg_seq)
                 self._file = open(path, "ab")
                 self._written = self._synced = os.path.getsize(path)
@@ -546,6 +657,7 @@ class RequestLog:
                 "appended": self.appended,
                 "fsyncs": self.fsyncs,
                 "compacted_segments": self.compacted_segments,
+                "locked": self._lock_key is not None,
             }
 
     def close(self) -> None:
@@ -555,6 +667,9 @@ class RequestLog:
                 os.fsync(self._file.fileno())
                 self._file.close()
                 self._file = None
+            # release the single-writer lock with the fd: a closed log
+            # must not fence out a successor service over the workdir
+            self._release_lock()
 
     def __enter__(self) -> "RequestLog":
         return self

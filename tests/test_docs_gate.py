@@ -1,0 +1,93 @@
+"""Docs gate: the CLI flag reference in docs/README.md must match the
+real argparsers — every documented flag exists, and every user-facing
+(non-suppressed) flag is documented.  Runs in the normal tier-1 pytest
+step, so a flag added without docs (or docs for a removed flag) fails CI.
+"""
+
+import argparse
+import importlib.util
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS_README = os.path.join(REPO, "docs", "README.md")
+
+_FLAG_RE = re.compile(r"(--[a-z][a-z0-9-]*)")
+
+
+def _load_benchmark_parser() -> argparse.ArgumentParser:
+    """benchmarks/ is not a package; load the module by path."""
+    path = os.path.join(REPO, "benchmarks", "service_throughput.py")
+    spec = importlib.util.spec_from_file_location("_svc_throughput", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.build_parser()
+
+
+def _serve_mine_parser() -> argparse.ArgumentParser:
+    from repro.launch.serve_mine import build_parser
+
+    return build_parser()
+
+
+def _parser_flags(parser: argparse.ArgumentParser):
+    """(user-facing, suppressed) long-option sets of one parser."""
+    public, hidden = set(), set()
+    for action in parser._actions:
+        for opt in action.option_strings:
+            if not opt.startswith("--"):
+                continue
+            if opt == "--help":
+                continue
+            (hidden if action.help == argparse.SUPPRESS
+             else public).add(opt)
+    return public, hidden
+
+
+def _documented_flags(section_marker: str):
+    """Flags mentioned in docs/README.md under the section whose heading
+    contains ``section_marker`` (up to the next heading)."""
+    with open(DOCS_README) as f:
+        text = f.read()
+    lines = text.splitlines()
+    start = next((i for i, ln in enumerate(lines)
+                  if ln.startswith("#") and section_marker in ln), None)
+    assert start is not None, (
+        f"docs/README.md has no heading mentioning {section_marker!r}")
+    body = []
+    for ln in lines[start + 1:]:
+        if ln.startswith("#"):
+            break
+        body.append(ln)
+    return set(_FLAG_RE.findall("\n".join(body)))
+
+
+CASES = [
+    ("serve_mine", _serve_mine_parser),
+    ("service_throughput", _load_benchmark_parser),
+]
+
+
+@pytest.mark.parametrize("marker,load", CASES,
+                         ids=[c[0] for c in CASES])
+def test_docs_flags_match_argparser(marker, load):
+    public, hidden = _parser_flags(load())
+    documented = _documented_flags(marker)
+    ghost = documented - public - hidden
+    assert not ghost, (
+        f"docs/README.md documents flags {sorted(ghost)} that "
+        f"{marker}'s argparser does not define")
+    undocumented = public - documented
+    assert not undocumented, (
+        f"{marker} defines user-facing flags {sorted(undocumented)} "
+        f"that docs/README.md does not document")
+
+
+def test_internal_flags_stay_undocumented():
+    """Suppressed (internal) flags must not leak into the reference."""
+    _public, hidden = _parser_flags(_load_benchmark_parser())
+    assert "--recover-child" in hidden       # the gate's child mode
+    documented = _documented_flags("service_throughput")
+    assert not (documented & hidden)
