@@ -490,6 +490,93 @@ def run_recover_gate(smoke: bool = False) -> Dict:
         shutil.rmtree(workdir, ignore_errors=True)
 
 
+def run_telemetry_gate(smoke: bool = False) -> Dict:
+    """Telemetry gate: scrape a live exporter and demand a coherent story.
+
+    Runs a short mixed workload through a real service with the HTTP
+    exporter attached, then checks (a) the /metrics exposition parses
+    cleanly, (b) the required series exist — per-stage latency for the
+    execute and wal_append stages, per-executor modeled joules, and both
+    SLO burn rates, (c) every request's exported trace contains the full
+    span chain from WAL append through delivery, and (d) the span ring
+    dropped nothing.  Any hole exits the process nonzero in CI.
+    """
+    import urllib.request
+
+    import numpy as np
+
+    from repro.service import (
+        ClusteringService,
+        MiningClient,
+        TelemetryServer,
+        exposition_errors,
+    )
+
+    n = 8 if smoke else 16
+    required_series = (
+        'repro_stage_latency_seconds{executor="",quantile="p50",'
+        'stage="execute"}',
+        'repro_stage_latency_seconds{executor="",quantile="p50",'
+        'stage="wal_append"}',
+        "repro_executor_modeled_joules{",
+        'repro_slo_burn_rate{slo="latency"}',
+        'repro_slo_burn_rate{slo="errors"}',
+    )
+    required_spans = {"wal_append", "queue_wait", "execute", "deliver"}
+    workdir = tempfile.mkdtemp(prefix="svc_telemetry_")
+    try:
+        service = ClusteringService(workdir, max_batch=4, max_wait_s=0.005)
+        client = MiningClient(service=service)
+        rng = np.random.default_rng(31)
+        with service, TelemetryServer(service.metrics_snapshot,
+                                      tracer=service.tracer) as exporter:
+            handles = []
+            for i in range(n):
+                algo = ("kmeans", "dbscan")[i % 2]
+                # distinct content per request: a cache hit would skip the
+                # queue/execute spans the gate demands
+                data = rng.normal(0.0, 1.0, size=(48 + i, 2)).astype(
+                    np.float32)
+                params = ({"k": 3, "seed": i, "max_iters": 10}
+                          if algo == "kmeans"
+                          else {"eps": 0.5, "min_pts": 4})
+                handles.append(client.submit(
+                    f"tenant-{i % 3}", algo, data, params=params,
+                    executor="jax-ref"))
+            for h in handles:
+                h.result(300)
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{exporter.port}/metrics",
+                    timeout=30) as resp:
+                text = resp.read().decode("utf-8")
+            problems = [f"exposition: {e}"
+                        for e in exposition_errors(text)]
+            for needle in required_series:
+                if needle not in text:
+                    problems.append(f"missing series: {needle}")
+            incomplete = 0
+            for h in handles:
+                names = {s["name"]
+                         for s in service.export_trace(h.trace_id)}
+                if not required_spans <= names:
+                    incomplete += 1
+                    problems.append(
+                        f"trace {h.trace_id} incomplete: missing "
+                        f"{sorted(required_spans - names)}")
+            dropped = service.tracer.stats()["dropped"]
+            if dropped:
+                problems.append(f"span ring dropped {dropped} span(s)")
+        return {
+            "requests": n,
+            "exposition_bytes": len(text),
+            "incomplete_traces": incomplete,
+            "dropped_spans": dropped,
+            "problems": problems,
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
 def build_parser() -> argparse.ArgumentParser:
     """The CLI surface (separate so the docs gate can introspect it)."""
     ap = argparse.ArgumentParser()
@@ -508,6 +595,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "pow2/linear/adaptive bucketing and exit nonzero "
                          "if adaptive fails to beat pow2 on padding waste "
                          "for zipf at equal-or-better recompile count")
+    ap.add_argument("--telemetry-gate", action="store_true",
+                    help="run ONLY the telemetry gate: drive a short mixed "
+                         "workload with the HTTP exporter attached, scrape "
+                         "/metrics, and exit nonzero on malformed "
+                         "exposition, a missing required series (per-stage "
+                         "latency, per-executor joules, SLO burn rate), an "
+                         "incomplete request trace, or dropped spans")
     ap.add_argument("--recover-child", nargs=2, metavar=("WORKDIR", "N"),
                     help=argparse.SUPPRESS)   # internal: gate child mode
     return ap
@@ -531,6 +625,19 @@ def main() -> None:
                   "requests", file=sys.stderr)
             sys.exit(1)
         print("# admitted-means-durable: SIGKILL lost zero requests")
+        return
+    if args.telemetry_gate:
+        gate = run_telemetry_gate(smoke=args.smoke)
+        print(f"# telemetry gate: {gate['requests']} requests, "
+              f"{gate['exposition_bytes']} exposition bytes, "
+              f"{gate['incomplete_traces']} incomplete trace(s), "
+              f"{gate['dropped_spans']} dropped span(s)")
+        if gate["problems"]:
+            for p in gate["problems"]:
+                print(f"# FAIL: {p}", file=sys.stderr)
+            sys.exit(1)
+        print("# telemetry gate: exposition parses, required series "
+              "present, every trace complete, zero dropped spans")
         return
     if args.bucket_sweep:
         rows = run_bucket_sweep(smoke=args.smoke)

@@ -44,6 +44,8 @@ from repro.service import (
     ClusteringService,
     JobSuspended,
     MiningClient,
+    TelemetryServer,
+    chrome_trace,
 )
 
 MAX_RESUBMITS = 3
@@ -162,6 +164,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "docs/bucketing_study.md)")
     ap.add_argument("--ttl", type=float, default=None,
                     help="per-request deadline, seconds from submit")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text on this port for the run "
+                         "(GET /metrics; also /snapshot, /trace, /healthz; "
+                         "0 binds an ephemeral port and prints it)")
+    ap.add_argument("--trace-dump", default=None,
+                    help="write every recorded span as Chrome trace-event "
+                         "JSON to this path at exit (open in Perfetto or "
+                         "chrome://tracing)")
     ap.add_argument("--resume", action="store_true",
                     help="complete SUSPENDED batches from a previous run")
     ap.add_argument("--recover", action="store_true",
@@ -185,6 +195,12 @@ def main() -> None:
                              else args.device_budget_mb * 2**20),
     )
     client = MiningClient(service=service)
+    exporter = None
+    if args.metrics_port is not None:
+        exporter = TelemetryServer(service.metrics_snapshot,
+                                   tracer=service.tracer,
+                                   port=args.metrics_port).start()
+        print(f"# telemetry: http://127.0.0.1:{exporter.port}/metrics")
     if args.resume and not args.recover:
         outcomes = client.resume_suspended()
         for o in outcomes:
@@ -218,6 +234,12 @@ def main() -> None:
                 except Exception as e:
                     print(f"replayed request {h.request_id} failed: {e!r}")
         failures = drive(client, workload, args.rate, executor, ttl=args.ttl)
+    if exporter is not None:
+        exporter.stop()
+    if args.trace_dump:
+        with open(args.trace_dump, "w") as fh:
+            json.dump(chrome_trace(service.export_trace()), fh)
+        print(f"# trace dump: {args.trace_dump}")
     snap = client.metrics()
     print(json.dumps(snap, indent=2, default=str))
     lanes = {name: f"{st['busy_s']:.3f}s/{st['batches']}b"
@@ -231,6 +253,15 @@ def main() -> None:
     print(f"# bucketing [{bkt['policy']['name']}]: "
           f"padding waste {bkt['padding_waste']:.2%}, "
           f"{bkt['recompiles']} compiled shape(s)")
+    slo = snap["slo"]
+    print(f"# slo: {'OK' if slo['ok'] else 'VIOLATED'} — "
+          f"p{slo['latency_percentile']:g} "
+          f"{slo['observed_latency_s'] * 1e3:.1f}ms vs "
+          f"{slo['latency_target_s'] * 1e3:.0f}ms target "
+          f"(burn {slo['latency_burn_rate']:.2f}), "
+          f"error rate {slo['observed_error_rate']:.3f} vs "
+          f"{slo['error_rate_target']:.3f} "
+          f"(burn {slo['errors_burn_rate']:.2f})")
 
 
 if __name__ == "__main__":

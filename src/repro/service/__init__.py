@@ -36,6 +36,10 @@ estimates are decided (and persisted) before any data moves.
     cache     — content-hash result cache (disk spill + TTL)
     metrics   — latency percentiles, batch occupancy, energy proxy +
                 per-paradigm joules-per-work EWMA (dispatch feedback)
+    trace     — span-based request tracer: one trace id from WAL append
+                to delivery, surviving SIGKILL via the event log
+    telemetry — Prometheus exposition + HTTP exporter, rotating JSONL
+                event log, SLO burn-rate evaluation
     service   — the engine tying it together (executor lane pool)
 """
 
@@ -75,6 +79,21 @@ from repro.service.queue import (
 )
 from repro.service.service import ClusteringService, ExecutorLane
 from repro.service.session import StreamingSession
+from repro.service.telemetry import (
+    EventLog,
+    SLOEvaluator,
+    TelemetryServer,
+    exposition_errors,
+    read_events,
+    render_prometheus,
+)
+from repro.service.trace import (
+    RequestTracer,
+    Span,
+    chrome_trace,
+    new_trace_id,
+    read_spans,
+)
 from repro.service.wal import RequestLog, WalLocked, WalRecord
 
 __all__ = [
@@ -86,6 +105,7 @@ __all__ = [
     "BucketPolicy",
     "BatchOutcome",
     "ClusteringService",
+    "EventLog",
     "EXECUTOR_DISTRIBUTED",
     "EXECUTOR_JAX_REF",
     "EXECUTOR_NUMPY_MT",
@@ -108,13 +128,23 @@ __all__ = [
     "RequestDropped",
     "RequestLog",
     "RequestTooLarge",
+    "RequestTracer",
     "ResultCache",
+    "SLOEvaluator",
+    "Span",
+    "TelemetryServer",
     "WalLocked",
     "WalRecord",
     "ResultHandle",
     "ServiceMetrics",
     "StreamingSession",
+    "chrome_trace",
     "content_key",
     "default_registry",
+    "exposition_errors",
     "make_policy",
+    "new_trace_id",
+    "read_events",
+    "read_spans",
+    "render_prometheus",
 ]

@@ -193,7 +193,12 @@ class MicroBatcher:
         return dead
 
     def _stage(self, drained: List[MiningRequest]) -> None:
+        now = time.time()
         for req in drained:
+            if req.staged == 0.0:
+                # splits queue_wait (submit -> drained into staging) from
+                # batch_wait (staged -> claimed) in the request's trace
+                req.staged = now
             self._staged.setdefault(
                 BatchKey.for_request(req), []).append(req)
 

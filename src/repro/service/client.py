@@ -88,6 +88,11 @@ class ResultHandle:
         return self._request.job_id
 
     @property
+    def trace_id(self) -> Optional[str]:
+        """Id of the request's end-to-end trace (stable across replays)."""
+        return self._request.trace_id
+
+    @property
     def latency(self) -> Optional[float]:
         return self._request.latency
 
@@ -189,6 +194,11 @@ class MiningClient:
 
     def metrics(self) -> Dict[str, Any]:
         return self.service.metrics_snapshot()
+
+    def trace(self, trace_id: str):
+        """All recorded spans of one request's trace, oldest first —
+        merged across process lifetimes when the event log is on."""
+        return self.service.export_trace(trace_id)
 
     def resume_suspended(self):
         """Complete batches a previous (killed) process left SUSPENDED."""

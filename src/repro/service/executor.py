@@ -64,6 +64,8 @@ class BatchOutcome:
     cache_keys: Optional[List[str]] = None          # per item content hashes
     plan: Optional[Dict[str, Any]] = None           # ExecutionPlan.summary()
     lengths: Optional[List[int]] = None             # per item real points
+    host_s: float = 0.0     # exec wall time spent in host bookkeeping
+    device_s: float = 0.0   # exec_s minus host_s (the compute share)
 
     @property
     def real_points(self) -> int:
@@ -109,6 +111,11 @@ class BatchExecutor:
         # entries to the job record (see repro.service.wal)
         self.on_batch_durable: Optional[
             Callable[[int, List[Any]], None]] = None
+        # optional RequestTracer (see repro.service.trace): when attached,
+        # plan / execute-attempt / checkpoint / resume spans are emitted
+        # under each request's trace id — which rides in the job record,
+        # so a resumed batch in a NEW process continues the same traces
+        self.tracer = None
 
     def _ckpt(self, job_id: int) -> CheckpointStore:
         return CheckpointStore(
@@ -158,9 +165,18 @@ class BatchExecutor:
         # phase one of the plan/execute contract: placement, shard layout,
         # cost + modeled joules — persisted with the job so the routing
         # decision is inspectable after the fact
+        t_plan = time.time()
+        m_plan = time.monotonic()
         plan = self.registry.get(executor).plan(
             key.algo, params, batch_size=size, n_max=n_max, features=d,
             energy_hint=(energy_hints or {}).get(executor))
+        if self.tracer is not None:
+            plan_dur = time.monotonic() - m_plan
+            for r in batch.requests:
+                if r.trace_id:
+                    self.tracer.emit(
+                        r.trace_id, "plan", t_plan, plan_dur,
+                        executor=executor, batch_id=batch.batch_id)
         eps = float(params.get("eps", 1.0))
         data_high = max(
             float(np.max(r.data)) if r.data.size else 0.0
@@ -186,6 +202,9 @@ class BatchExecutor:
             # content hashes survive in the job record so a resumed batch
             # can re-populate the result cache after a restart
             "cache_keys": [r.cache_key or "" for r in batch.requests],
+            # trace ids survive too: the process that resumes this batch
+            # emits its spans under the SAME traces (crash continuity)
+            "trace_ids": [r.trace_id or "" for r in batch.requests],
             "plan": plan.summary(),
         }
         job_id = self.jobs.enqueue(SERVICE_JOB_KIND, job_params)
@@ -270,14 +289,26 @@ class BatchExecutor:
         lock = threading.Lock()
         save_step = [int(ckpt.latest_step() or 0)]
         events = [0]
+        tr = self.tracer
+        traces: List[str] = [str(t) for t in (jp.get("trace_ids") or [])]
+        host = [0.0]   # checkpoint + progress time inside the exec window
 
-        def save() -> str:
+        def save(item: Optional[int] = None) -> str:
             # every checkpoint is self-contained (data rides along), so GC
             # of old steps can never strand a resume
             save_step[0] += 1
+            t_wall = time.time()
+            m0 = time.monotonic()
             path = ckpt.save(save_step[0], state, metadata={"params": jp})
             self.jobs.report_progress(job_id, step=save_step[0],
                                       checkpoint_path=path)
+            dur = time.monotonic() - m0
+            host[0] += dur
+            if (tr is not None and item is not None
+                    and 0 <= item < len(traces) and traces[item]):
+                tr.emit(traces[item], "checkpoint", t_wall, dur,
+                        executor=jp["executor"], job_id=job_id,
+                        step=save_step[0])
             return path
 
         def on_item_state(i: int, tree: Dict[str, np.ndarray]) -> None:
@@ -286,7 +317,7 @@ class BatchExecutor:
                 state["item"] = np.int32(i)
                 for k, v in tree.items():
                     state[f"mid.{k}"] = np.asarray(v)
-                save()
+                save(i)
             events[0] += 1
             if progress_hook is not None:
                 progress_hook(job_id, i, events[0])
@@ -302,7 +333,7 @@ class BatchExecutor:
                              "n_clusters", "noise", "expansions"):
                     if name in scalars:
                         state[name][i] = scalars[name]
-                save()
+                save(i)
             events[0] += 1
             if progress_hook is not None:
                 progress_hook(job_id, i, events[0])
@@ -325,6 +356,22 @@ class BatchExecutor:
                 mid_state=mid,
             ))
 
+        # one execute-attempt span per trace, journaled at begin
+        # (announce): if this process is SIGKILL'd mid-batch, the on-disk
+        # span_start is the first attempt's footprint, and the process
+        # that resumes the job emits a resume mark + a second attempt span
+        # under the same trace ids (they ride in the job record)
+        live_traces = list(dict.fromkeys(t for t in traces if t))
+        exec_spans = []
+        if tr is not None:
+            for tid in live_traces:
+                if resumed:
+                    tr.mark(tid, "resume", job_id=job_id,
+                            executor=jp["executor"])
+                exec_spans.append(tr.begin(
+                    tid, "execute", announce=True, executor=jp["executor"],
+                    job_id=job_id, resumed=resumed))
+
         t0 = time.time()
         hb = max(0.05, min(1.0, self.jobs.heartbeat_timeout / 4.0))
         error: Optional[BaseException] = None
@@ -337,11 +384,21 @@ class BatchExecutor:
             except BaseException as e:
                 error = e
         exec_s = time.time() - t0
+        # host/device split: checkpointing + progress reporting is host
+        # bookkeeping; the remainder of the exec window is the paradigm's
+        # compute share (kernel launches, device sync, result copies)
+        host_s = min(host[0], exec_s)
+        device_s = max(0.0, exec_s - host_s)
 
         if error is not None:
+            for h in exec_spans:
+                h.finish(error=repr(error))
             self.jobs.report_progress(job_id, error=repr(error))
             self.jobs.transition(job_id, JobState.FAILED)
             raise error
+
+        for h in exec_spans:
+            h.finish(suspended=bool(outcome.suspended))
 
         common = dict(
             job_id=job_id, algo=jp["algo"], executor=jp["executor"],
@@ -351,6 +408,7 @@ class BatchExecutor:
             cache_keys=list(jp.get("cache_keys") or []),
             plan=plan.summary(),
             lengths=[int(x) for x in jp["lengths"]],
+            host_s=host_s, device_s=device_s,
         )
         if outcome.suspended:
             with lock:
@@ -363,6 +421,10 @@ class BatchExecutor:
                     state["active"] = np.asarray(False)
                 save()
             self.jobs.transition(job_id, JobState.SUSPENDED)
+            if tr is not None:
+                for tid in live_traces:
+                    tr.mark(tid, "suspend", job_id=job_id,
+                            item_index=outcome.item_index)
             return BatchOutcome(suspended=True, **common)
 
         with lock:

@@ -20,8 +20,8 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
-from collections import defaultdict, deque
-from typing import Any, Deque, Dict, List, Optional, Set, Tuple
+from collections import OrderedDict, defaultdict, deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 # Same constant as benchmarks/energy.py (tablet-class active power, W).
 P_ACTIVE_WATTS = 3.0
@@ -34,6 +34,17 @@ DEFAULT_WINDOW = 10_000
 # enough history that one slow batch (cold jit compile) cannot flip
 # dispatch, light enough to track a drifting host.
 ENERGY_EWMA_ALPHA = 0.2
+
+# The compiled-shape tracker is an LRU bounded at this many entries: it
+# mirrors what a real executable cache can hold, so "first sight" means
+# "not in tracker memory" — a shape evicted and seen again recounts as a
+# recompile, exactly as the device would recompile it.
+MAX_TRACKED_SHAPES = 4096
+
+# Per-(stage, executor) latency windows for the stage breakdown, and a
+# cardinality cap so a misbehaving caller cannot mint unbounded series.
+STAGE_WINDOW = 2048
+MAX_STAGE_SERIES = 512
 
 
 def percentile(values: List[float], q: float) -> float:
@@ -65,6 +76,8 @@ class BatchRecord:
     exec_s: float
     resumed: bool
     real_points: int = 0       # sum of item lengths (0 = not reported)
+    host_s: float = 0.0        # exec time spent on host work (checkpoints)
+    device_s: float = 0.0      # exec_s minus host bookkeeping
 
     @property
     def occupancy(self) -> float:
@@ -87,7 +100,8 @@ class ServiceMetrics:
     window-local); lifetime totals live in plain counters.
     """
 
-    def __init__(self, window: int = DEFAULT_WINDOW) -> None:
+    def __init__(self, window: int = DEFAULT_WINDOW,
+                 max_tracked_shapes: int = MAX_TRACKED_SHAPES) -> None:
         self._lock = threading.Lock()
         self._requests: Deque[RequestRecord] = deque(maxlen=window)
         self._batches: Deque[BatchRecord] = deque(maxlen=max(1, window // 4))
@@ -103,11 +117,25 @@ class ServiceMetrics:
         # real vs padded points executed, and the distinct compiled-program
         # shapes seen: each fresh (executor, algo, features, n_max) combo
         # is a jit compile the executable cache must hold — the recompile
-        # axis of the bucketing tradeoff (padding waste vs cache misses)
+        # axis of the bucketing tradeoff (padding waste vs cache misses).
+        # LRU-bounded: a long-lived service admitting arbitrary shapes must
+        # not grow this without limit, so the oldest-seen shape is evicted
+        # past ``max_tracked_shapes`` (counted in ``shape_evictions``); an
+        # evicted shape seen again recounts as a recompile, which matches
+        # what a same-sized executable cache would actually do.
         self.total_real_points = 0
         self.total_padded_points = 0
-        self._compiled_shapes: Set[Tuple[str, str, int, int]] = set()
+        self.max_tracked_shapes = max(1, int(max_tracked_shapes))
+        self._compiled_shapes: "OrderedDict[Tuple[str, str, int, int], None]"
+        self._compiled_shapes = OrderedDict()
         self.recompiles = 0
+        self.shape_evictions = 0
+        # -- outcome window (SLO input) + per-stage latency breakdown -------
+        self.total_failures = 0
+        self._failure_reasons: Dict[str, int] = {}
+        self._outcomes: Deque[bool] = deque(maxlen=window)
+        self._stages: Dict[Tuple[str, str], Deque[float]] = {}
+        self._stage_counts: Dict[Tuple[str, str], int] = {}
 
     def record_request(
         self,
@@ -126,8 +154,34 @@ class ServiceMetrics:
                 cache_hit=cache_hit,
             ))
             self.total_requests += 1
+            self._outcomes.append(True)
             if cache_hit:
                 self.total_cache_hits += 1
+
+    def record_failure(self, reason: str) -> None:
+        """A request finished with an error (feeds the SLO error budget)."""
+        with self._lock:
+            self.total_failures += 1
+            self._outcomes.append(False)
+            key = str(reason)
+            if key not in self._failure_reasons and \
+                    len(self._failure_reasons) >= 64:
+                key = "other"          # bound reason cardinality
+            self._failure_reasons[key] = self._failure_reasons.get(key, 0) + 1
+
+    def record_stage(self, stage: str, dur_s: float,
+                     executor: Optional[str] = None) -> None:
+        """One span's duration for the per-stage latency breakdown."""
+        key = (str(stage), str(executor or ""))
+        with self._lock:
+            dq = self._stages.get(key)
+            if dq is None:
+                if len(self._stages) >= MAX_STAGE_SERIES:
+                    return             # cardinality bound: drop, don't grow
+                dq = deque(maxlen=STAGE_WINDOW)
+                self._stages[key] = dq
+            dq.append(float(dur_s))
+            self._stage_counts[key] = self._stage_counts.get(key, 0) + 1
 
     def record_batch(
         self,
@@ -142,12 +196,15 @@ class ServiceMetrics:
         work: float = 0.0,
         real_points: int = 0,
         features: int = 0,
+        host_s: float = 0.0,
+        device_s: float = 0.0,
     ) -> None:
         with self._lock:
             self._batches.append(BatchRecord(
                 algo=algo, executor=executor, size=size, capacity=capacity,
                 n_max=n_max, exec_s=exec_s, resumed=resumed,
                 real_points=int(real_points),
+                host_s=float(host_s), device_s=float(device_s),
             ))
             self.total_batches += 1
             self.total_joules += P_ACTIVE_WATTS * exec_s
@@ -155,9 +212,14 @@ class ServiceMetrics:
                 self.total_real_points += int(real_points)
                 self.total_padded_points += int(size) * int(n_max)
             shape = (executor, algo, int(features), int(n_max))
-            if shape not in self._compiled_shapes:
-                self._compiled_shapes.add(shape)
+            if shape in self._compiled_shapes:
+                self._compiled_shapes.move_to_end(shape)
+            else:
+                self._compiled_shapes[shape] = None
                 self.recompiles += 1
+                while len(self._compiled_shapes) > self.max_tracked_shapes:
+                    self._compiled_shapes.popitem(last=False)
+                    self.shape_evictions += 1
             if resumed:
                 self.resumed_batches += 1
             if work > 0.0 and exec_s > 0.0:
@@ -177,6 +239,17 @@ class ServiceMetrics:
         with self._lock:
             self.suspended_batches += 1
 
+    def window_stats(self) -> Dict[str, Any]:
+        """Windowed observations the SLO evaluator consumes."""
+        with self._lock:
+            latencies = [r.latency_s for r in self._requests]
+            outcomes = list(self._outcomes)
+        return {
+            "latencies": latencies,
+            "failures": sum(1 for ok in outcomes if not ok),
+            "outcomes": len(outcomes),
+        }
+
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             requests = list(self._requests)
@@ -188,11 +261,19 @@ class ServiceMetrics:
                 "requests": self.total_requests,
                 "cache_hits": self.total_cache_hits,
                 "batches": self.total_batches,
+                "failures": self.total_failures,
                 "modeled_joules": self.total_joules,
             }
             real_pts = self.total_real_points
             padded_pts = self.total_padded_points
             recompiles = self.recompiles
+            tracked_shapes = len(self._compiled_shapes)
+            shape_evictions = self.shape_evictions
+            failures = self.total_failures
+            by_reason = dict(self._failure_reasons)
+            outcomes = list(self._outcomes)
+            stage_windows = {k: list(v) for k, v in self._stages.items()}
+            stage_counts = dict(self._stage_counts)
 
         latencies = [r.latency_s for r in requests]
         waits = [r.queue_wait_s for r in requests]
@@ -214,9 +295,32 @@ class ServiceMetrics:
                 "mean_occupancy": (
                     sum(b.occupancy for b in bs) / len(bs) if bs else 0.0),
                 "exec_s": sum(b.exec_s for b in bs),
+                "host_s": sum(b.host_s for b in bs),
+                "device_s": sum(b.device_s for b in bs),
                 "modeled_joules": sum(b.modeled_joules for b in bs),
                 "joules_per_work": jpw.get(name),
             }
+
+        # per-stage latency breakdown: aggregate across executors, with a
+        # by-executor sub-block for spans that carried an executor attr
+        stages: Dict[str, Dict[str, Any]] = {}
+        for (stage, ex), vals in sorted(stage_windows.items()):
+            entry = stages.setdefault(stage, {
+                "count": 0, "window": 0, "_all": [], "by_executor": {}})
+            entry["count"] += stage_counts.get((stage, ex), 0)
+            entry["window"] += len(vals)
+            entry["_all"].extend(vals)
+            if ex:
+                entry["by_executor"][ex] = {
+                    "count": stage_counts.get((stage, ex), 0),
+                    "p50_s": percentile(vals, 50),
+                    "p99_s": percentile(vals, 99),
+                }
+        for entry in stages.values():
+            vals = entry.pop("_all")
+            entry["p50_s"] = percentile(vals, 50)
+            entry["p99_s"] = percentile(vals, 99)
+            entry["mean_s"] = sum(vals) / len(vals) if vals else 0.0
 
         by_bucket: Dict[str, int] = defaultdict(int)
         for b in batches:
@@ -230,12 +334,27 @@ class ServiceMetrics:
             "point_occupancy": (real_pts / padded_pts
                                 if padded_pts else 0.0),
             "recompiles": recompiles,
+            "tracked_shapes": tracked_shapes,
+            "max_tracked_shapes": self.max_tracked_shapes,
+            "shape_evictions": shape_evictions,
             "by_bucket": dict(by_bucket),
+        }
+
+        window_failures = sum(1 for ok in outcomes if not ok)
+        errors = {
+            "total_failures": failures,
+            "window_outcomes": len(outcomes),
+            "window_failures": window_failures,
+            "window_error_rate": (window_failures / len(outcomes)
+                                  if outcomes else 0.0),
+            "by_reason": by_reason,
         }
 
         return {
             "totals": totals,           # lifetime; the rest is window-local
             "bucketing": bucketing,
+            "stages": stages,
+            "errors": errors,
             "requests": len(requests),
             "cache_hits": sum(1 for r in requests if r.cache_hit),
             "p50_latency_s": percentile(latencies, 50),

@@ -162,11 +162,18 @@ class MiningRequest:
     executor: Optional[str] = None  # explicit paradigm override
     priority: int = PRIORITY_NORMAL
     deadline: Optional[float] = None   # absolute epoch seconds; None = never
+    # expiry bookkeeping on the monotonic clock: set by the service from
+    # deadline/ttl at admission, immune to wall-clock steps (NTP, manual
+    # set).  The absolute ``deadline`` above stays wall-clock — it is the
+    # user-facing API and what the WAL persists across processes.
+    deadline_mono: Optional[float] = None
+    trace_id: Optional[str] = None  # per-request trace correlation id
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     submitted: float = dataclasses.field(default_factory=time.time)
 
     # -- filled in as the request moves through the service -----------------
+    staged: float = 0.0            # when the micro-batcher staged it
     batched: float = 0.0           # when the micro-batcher claimed it
     completed: float = 0.0
     cache_hit: bool = False
@@ -196,6 +203,12 @@ class MiningRequest:
     # -- QoS -----------------------------------------------------------------
 
     def expired(self, now: Optional[float] = None) -> bool:
+        # the monotonic deadline governs when set: a wall-clock step must
+        # neither expire a fresh request nor immortalise a stale one.
+        # Requests built directly with only an absolute deadline (tests,
+        # external constructors) keep the legacy wall-clock comparison.
+        if self.deadline_mono is not None:
+            return time.monotonic() >= self.deadline_mono
         if self.deadline is None:
             return False
         return (time.time() if now is None else now) >= self.deadline
@@ -349,6 +362,18 @@ class AdmissionQueue:
         # drain-rate EWMA feeding the retry_after estimate
         self._drained_at: Optional[float] = None
         self._drain_rate: float = 0.0      # requests/s, 0 = unknown yet
+        # telemetry tap: called as on_event(name, fields) for rejections
+        # and expiries (never under the queue lock, never raising through)
+        self.on_event: Optional[Callable[[str, Dict[str, Any]], None]] = None
+
+    def _notify(self, name: str, **fields: Any) -> None:
+        cb = self.on_event
+        if cb is None:
+            return
+        try:
+            cb(name, fields)
+        except Exception:
+            logger.exception("queue on_event hook raised for %s", name)
 
     # -- retry_after ---------------------------------------------------------
 
@@ -453,35 +478,48 @@ class AdmissionQueue:
         entry).  Best-effort — :meth:`submit` remains authoritative; a
         race that slips past the precheck is still rejected there.
         """
-        self._screen(req)
-        with self._lock:
-            self._bounds_locked(req)
-            if self.tenant_rate is not None:
-                self._take_token(req.tenant, time.time(), take=False)
+        try:
+            self._screen(req)
+            with self._lock:
+                self._bounds_locked(req)
+                if self.tenant_rate is not None:
+                    self._take_token(req.tenant, time.monotonic(),
+                                     take=False)
+        except Exception as e:
+            self._notify("rejected", stage="precheck",
+                         reason=type(e).__name__, tenant=req.tenant,
+                         request_id=req.request_id, trace_id=req.trace_id)
+            raise
 
     def submit(self, req: MiningRequest, *, screened: bool = False) -> None:
         """Admit one request.  ``screened=True`` skips the pure
         validation/size screen when the caller just ran :meth:`precheck`
         on the same (immutable) request — the locked bounds/token checks
         always re-run."""
-        if not screened:
-            self._screen(req)
-        with self._lock:
-            self._bounds_locked(req)
-            # the token is taken only once the request will actually be
-            # admitted: a BacklogFull rejection must not burn rate budget
-            # (the client's honoured retry would then bounce twice)
-            if self.tenant_rate is not None:
-                self._take_token(req.tenant, time.time())
-            lane = self._lanes.setdefault(req.priority, OrderedDict())
-            pending = lane.get(req.tenant)
-            if pending is None:
-                pending = deque()
-                lane[req.tenant] = pending
-            pending.append(req)
-            self._tenant_depth[req.tenant] = (
-                self._tenant_depth.get(req.tenant, 0) + 1)
-            self._depth += 1
+        try:
+            if not screened:
+                self._screen(req)
+            with self._lock:
+                self._bounds_locked(req)
+                # the token is taken only once the request will actually be
+                # admitted: a BacklogFull rejection must not burn rate budget
+                # (the client's honoured retry would then bounce twice)
+                if self.tenant_rate is not None:
+                    self._take_token(req.tenant, time.monotonic())
+                lane = self._lanes.setdefault(req.priority, OrderedDict())
+                pending = lane.get(req.tenant)
+                if pending is None:
+                    pending = deque()
+                    lane[req.tenant] = pending
+                pending.append(req)
+                self._tenant_depth[req.tenant] = (
+                    self._tenant_depth.get(req.tenant, 0) + 1)
+                self._depth += 1
+        except Exception as e:
+            self._notify("rejected", stage="submit",
+                         reason=type(e).__name__, tenant=req.tenant,
+                         request_id=req.request_id, trace_id=req.trace_id)
+            raise
 
     # -- drain ---------------------------------------------------------------
 
@@ -546,6 +584,8 @@ class AdmissionQueue:
             req.fail(RequestDropped(
                 f"request {req.request_id} missed its deadline "
                 f"({req.deadline:.3f}) while queued; never dispatched"))
+            self._notify("expired", tenant=req.tenant,
+                         request_id=req.request_id, trace_id=req.trace_id)
         return out
 
     def depth(self, tenant: Optional[str] = None) -> int:

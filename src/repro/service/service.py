@@ -55,6 +55,8 @@ from repro.service.queue import (
     RateLimited,
     RequestDropped,
 )
+from repro.service.telemetry import EventLog, SLOEvaluator
+from repro.service.trace import RequestTracer, new_trace_id, read_spans
 from repro.service.wal import RequestLog
 
 logger = logging.getLogger(__name__)
@@ -162,6 +164,13 @@ class ClusteringService:
         heartbeat_timeout: float = 60.0,
         checkpoint_every: int = 8,
         poll_interval: float = 0.002,
+        trace_capacity: int = 4096,
+        event_log: bool = True,
+        event_log_bytes: int = 4 << 20,
+        event_log_keep: int = 8,
+        slo_latency_s: float = 2.0,
+        slo_percentile: float = 99.0,
+        slo_error_rate: float = 0.05,
     ) -> None:
         self.workdir = workdir
         if registry is None:
@@ -220,6 +229,24 @@ class ClusteringService:
             if wal else None)
         self.executor.on_batch_durable = self._batch_durable
         self.metrics = ServiceMetrics()
+        # telemetry: per-request span tracer (bounded ring), durable JSONL
+        # event log, and SLO targets.  The tracer's sink fans every
+        # completed span into the stage-latency metrics and the event log;
+        # the log's flushed lines are what let a trace survive SIGKILL
+        # (trace.read_spans merges them across process lifetimes).
+        self.events: Optional[EventLog] = (
+            EventLog(os.path.join(workdir, "events"),
+                     max_bytes=event_log_bytes, keep=event_log_keep)
+            if event_log else None)
+        self.tracer = RequestTracer(capacity=trace_capacity,
+                                    sink=self._trace_sink)
+        self.slo = SLOEvaluator(latency_target_s=slo_latency_s,
+                                latency_percentile=slo_percentile,
+                                error_rate_target=slo_error_rate)
+        self.executor.tracer = self.tracer
+        self.queue.on_event = self._queue_event
+        if self.wal is not None:
+            self.wal.on_event = self._telemetry_event
         self.token = CancellationToken()
         self.poll_interval = poll_interval
         self.lanes: Dict[str, ExecutorLane] = {}
@@ -240,11 +267,64 @@ class ClusteringService:
             req.algo, req.n_points, req.features, req.params,
             bucket=self.bucket_policy.bucket_ceiling)
 
+    # -- telemetry plumbing --------------------------------------------------
+
+    def _trace_sink(self, event: str, payload: Dict[str, Any]) -> None:
+        """Tracer sink: completed spans feed the per-stage latency
+        breakdown, and every span/span_start is journaled to the event
+        log (the durable half of cross-process trace continuity)."""
+        if event == "span":
+            attrs = payload.get("attrs") or {}
+            self.metrics.record_stage(
+                str(payload.get("name")),
+                float(payload.get("dur_s") or 0.0),
+                executor=attrs.get("executor"))
+        if self.events is not None:
+            self.events.emit(event, **payload)
+
+    def _queue_event(self, name: str, fields: Dict[str, Any]) -> None:
+        """Queue hook: a rejection/expiry with a trace lands on that trace
+        as a marker span (the sink then journals it); events for requests
+        that never got a trace go straight to the log."""
+        tid = fields.get("trace_id")
+        if tid:
+            self.tracer.mark(
+                tid, name,
+                **{k: v for k, v in fields.items() if k != "trace_id"})
+        elif self.events is not None:
+            self.events.emit(name, **fields)
+
+    def _telemetry_event(self, name: str, fields: Dict[str, Any]) -> None:
+        """Plain structured-event tap (WAL compactions, batch outcomes)."""
+        if self.events is not None:
+            self.events.emit(name, **fields)
+
+    def export_trace(self, trace_id: Optional[str] = None
+                     ) -> List[Dict[str, Any]]:
+        """Span dicts for one trace (or all), merged across process
+        lifetimes: the in-memory ring plus every span journaled in the
+        event log — a request preempted under a dead process and resumed
+        here exports as ONE trace covering both attempts."""
+        spans = {s["span_id"]: s for s in self.tracer.export(trace_id)}
+        if self.events is not None:
+            for d in read_spans(self.events.root, trace_id):
+                prior = spans.get(d["span_id"])
+                if prior is None or (prior.get("phase") == "start"
+                                     and d.get("phase") == "complete"):
+                    spans[d["span_id"]] = d
+        out = list(spans.values())
+        out.sort(key=lambda s: (s.get("t0") or 0.0))
+        return out
+
     # -- lifecycle -----------------------------------------------------------
 
     def start(self) -> "ClusteringService":
         if self._running:
             return self
+        if self.events is not None:
+            # a prior stop() closed the log; keep journaling spans across
+            # restart cycles of the same service object
+            self.events.reopen()
         self.token.reset()
         self._running = True
         self._stopped = False
@@ -277,13 +357,15 @@ class ClusteringService:
         self._running = False
         with self._lock:
             self._stopped = True
-        deadline = time.time() + timeout
+        # join budget on the monotonic clock: a wall-clock step (NTP, DST)
+        # must not stretch or starve the shutdown timeout
+        deadline = time.monotonic() + timeout
         if self._dispatcher is not None:
-            self._dispatcher.join(max(0.0, deadline - time.time()))
+            self._dispatcher.join(max(0.0, deadline - time.monotonic()))
             self._dispatcher = None
         for lane in self.lanes.values():
             if lane.thread is not None:
-                lane.thread.join(max(0.0, deadline - time.time()))
+                lane.thread.join(max(0.0, deadline - time.monotonic()))
                 lane.thread = None
         # anything that slipped into the queue around shutdown would
         # otherwise wait forever — no worker will ever drain it
@@ -294,6 +376,8 @@ class ClusteringService:
             # a stopped service must not hold a stale handle a successor
             # process's torn-tail truncation could race with
             self.wal.close()
+        if self.events is not None:
+            self.events.close()
 
     # -- submission ----------------------------------------------------------
 
@@ -333,15 +417,25 @@ class ClusteringService:
         priority: int = PRIORITY_NORMAL,
         deadline: Optional[float] = None,
         ttl: Optional[float] = None,
+        trace_id: Optional[str] = None,
     ) -> MiningRequest:
         data = np.ascontiguousarray(np.asarray(data, np.float32))
+        now_w = time.time()
         if ttl is not None:
-            ttl_deadline = time.time() + ttl
+            ttl_deadline = now_w + ttl
             deadline = (ttl_deadline if deadline is None
                         else min(deadline, ttl_deadline))
+        # expiry bookkeeping runs on the monotonic clock (immune to NTP
+        # steps / wall-clock jumps); the absolute wall-clock ``deadline``
+        # remains the API and WAL representation, re-anchored to monotonic
+        # here at every (re)submission
+        deadline_mono = (time.monotonic() + max(0.0, deadline - now_w)
+                         if deadline is not None else None)
         req = MiningRequest(tenant=tenant, algo=algo, data=data,
                             params=dict(params), executor=executor,
-                            priority=priority, deadline=deadline)
+                            priority=priority, deadline=deadline,
+                            deadline_mono=deadline_mono,
+                            trace_id=trace_id or new_trace_id())
         # reject params the batch key cannot hash at the door, not in the
         # worker thread (an unhashable value would kill the service loop)
         try:
@@ -367,7 +461,10 @@ class ClusteringService:
                     "admission log persists them as JSON); use "
                     "lists/scalars instead of tuples or non-string keys")
         req.cache_key = content_key(algo, req.params, data)
+        t_c, m_c = time.time(), time.monotonic()
         cached = self.cache.get(req.cache_key)
+        self.tracer.emit(req.trace_id, "cache_lookup", t_c,
+                         time.monotonic() - m_c, hit=cached is not None)
         if cached is not None:
             req.cache_hit = True
             req.resolve(cached)
@@ -375,8 +472,10 @@ class ClusteringService:
                 tenant=tenant, algo=algo,
                 executor=str(cached.get("executor", "cache")),
                 latency_s=req.latency or 0.0, cache_hit=True)
+            self.tracer.mark(req.trace_id, "deliver", cache_hit=True)
             return req
         if req.expired():
+            self.metrics.record_failure("RequestDropped")
             req.fail(RequestDropped(
                 f"request {req.request_id} was already past its deadline "
                 f"at submission"))
@@ -387,7 +486,8 @@ class ClusteringService:
             # must not pay the WAL fsync — overload shedding stays an
             # in-memory affair.  (Without a WAL there is nothing to save;
             # queue.submit below is the one screen.)
-            self.queue.precheck(req)
+            with self.tracer.begin(req.trace_id, "precheck"):
+                self.queue.precheck(req)
             # publish the entry id in the in-flight table BEFORE the
             # bytes can exist on disk: a concurrent recover() filters
             # replays against this table, and an id that became durable
@@ -401,14 +501,18 @@ class ClusteringService:
             # The append happens outside the service lock (it fsyncs;
             # group commit amortises concurrent submitters onto one sync).
             try:
-                self.wal.append_admit(
-                    tenant, algo, data, req.params, executor=executor,
-                    priority=priority, deadline=deadline,
-                    cache_key=req.cache_key, entry_id=req.wal_id)
+                with self.tracer.begin(req.trace_id, "wal_append",
+                                       entry_id=req.wal_id):
+                    self.wal.append_admit(
+                        tenant, algo, data, req.params, executor=executor,
+                        priority=priority, deadline=deadline,
+                        cache_key=req.cache_key, entry_id=req.wal_id,
+                        trace_id=req.trace_id)
             except BaseException:
                 with self._lock:
                     self._inflight.pop(req.request_id, None)
                 raise
+        t_e, m_e = time.time(), time.monotonic()
         try:
             with self._lock:
                 # check-and-enqueue under the same lock stop() takes before
@@ -440,6 +544,8 @@ class ClusteringService:
                 "service is stopped/preempted; resubmit after restart"))
             self._wal_consume(req)
             return req
+        self.tracer.emit(req.trace_id, "enqueue", t_e,
+                         time.monotonic() - m_e)
         req.add_done_callback(self._request_done)
         return req
 
@@ -502,6 +608,26 @@ class ClusteringService:
                 req.fail(RequestDropped(
                     f"no executor lane available for {names}"))
             return
+        now = time.time()
+        for req in batch.requests:
+            if not req.trace_id:
+                continue
+            # queue_wait covers submit -> staged (admission queue time);
+            # batch_wait covers staged -> claimed (coalescing time)
+            staged = req.staged or req.batched or now
+            self.tracer.emit(req.trace_id, "queue_wait", req.submitted,
+                             max(0.0, staged - req.submitted))
+            if req.staged:
+                claimed = req.batched or now
+                self.tracer.emit(req.trace_id, "batch_wait", req.staged,
+                                 max(0.0, claimed - req.staged))
+        first = batch.requests[0]
+        if first.trace_id:
+            self.tracer.mark(
+                first.trace_id, "batch_form", batch_id=batch.batch_id,
+                size=batch.size, capacity=batch.capacity,
+                n_pad=batch.n_max, oversized=batch.oversized,
+                lane=lane.name)
         lane.put(batch, est)
 
     # -- lane workers --------------------------------------------------------
@@ -530,6 +656,13 @@ class ClusteringService:
                 lane.finish(est, time.monotonic() - t0, ran)
 
     def _run_batch(self, batch: MicroBatch, executor: str) -> None:
+        now = time.time()
+        for req in batch.requests:
+            if req.trace_id and req.batched:
+                # claimed into a batch -> picked up by a lane worker
+                self.tracer.emit(req.trace_id, "lane_wait", req.batched,
+                                 max(0.0, now - req.batched),
+                                 executor=executor)
         try:
             outcome = self.executor.run_batch(
                 batch, token=self.token, executor=executor,
@@ -569,7 +702,14 @@ class ClusteringService:
             exec_s=outcome.exec_s, resumed=outcome.resumed,
             work=self._ewma_work(outcome),
             real_points=outcome.real_points,
-            features=int((outcome.plan or {}).get("features", 0)))
+            features=int((outcome.plan or {}).get("features", 0)),
+            host_s=outcome.host_s, device_s=outcome.device_s)
+        self._telemetry_event("batch", {
+            "job_id": outcome.job_id, "algo": outcome.algo,
+            "executor": outcome.executor, "size": outcome.size,
+            "exec_s": outcome.exec_s, "host_s": outcome.host_s,
+            "device_s": outcome.device_s, "suspended": outcome.suspended,
+            "resumed": outcome.resumed})
         if outcome.suspended:
             self.metrics.record_suspended()
             for req in requests:
@@ -577,9 +717,14 @@ class ClusteringService:
             return
         assert outcome.results is not None
         for req, result in zip(requests, outcome.results):
+            t_d, m_d = time.time(), time.monotonic()
             if req.cache_key:
                 self.cache.put(req.cache_key, result)
             req.resolve(result)
+            if req.trace_id:
+                self.tracer.emit(req.trace_id, "deliver", t_d,
+                                 time.monotonic() - m_d,
+                                 executor=outcome.executor)
             self.metrics.record_request(
                 tenant=req.tenant, algo=req.algo, executor=outcome.executor,
                 latency_s=req.latency or 0.0,
@@ -615,9 +760,11 @@ class ClusteringService:
     def _request_done(self, req: MiningRequest) -> None:
         with self._lock:
             self._inflight.pop(req.request_id, None)
+        err = req.exception(timeout=0)
+        if err is not None:
+            self.metrics.record_failure(type(err).__name__)
         if self.wal is None or req.wal_id is None:
             return
-        err = req.exception(timeout=0)
         if err is not None and getattr(err, "resubmit", False):
             # dropped by shutdown/preemption, not by the request itself:
             # the entry stays live so recover() replays it after restart
@@ -671,7 +818,14 @@ class ClusteringService:
                 n_max=outcome.n_max, exec_s=outcome.exec_s, resumed=True,
                 work=self._ewma_work(outcome),
                 real_points=outcome.real_points,
-                features=int((outcome.plan or {}).get("features", 0)))
+                features=int((outcome.plan or {}).get("features", 0)),
+                host_s=outcome.host_s, device_s=outcome.device_s)
+            self._telemetry_event("batch", {
+                "job_id": outcome.job_id, "algo": outcome.algo,
+                "executor": outcome.executor, "size": outcome.size,
+                "exec_s": outcome.exec_s, "host_s": outcome.host_s,
+                "device_s": outcome.device_s,
+                "suspended": outcome.suspended, "resumed": True})
             if outcome.results and outcome.cache_keys:
                 for ckey, result in zip(outcome.cache_keys, outcome.results):
                     if ckey:
@@ -731,10 +885,13 @@ class ClusteringService:
                 if rec.entry_id in inflight_ids:
                     continue
                 try:
+                    # the replay continues the ORIGINAL trace: one trace id
+                    # spans both process lifetimes (submit in the dead
+                    # process, replay + execution here)
                     req = self._submit(
                         rec.tenant, rec.algo, rec.data, params=rec.params,
                         executor=rec.executor, priority=rec.priority,
-                        deadline=rec.deadline)
+                        deadline=rec.deadline, trace_id=rec.trace_id)
                 except (BacklogFull, RateLimited):
                     # transient door pressure: keep the entry live — a
                     # later recover() re-offers it instead of losing it
@@ -749,6 +906,9 @@ class ClusteringService:
                     replayed += 1
                     if req.cache_hit:
                         cache_hits += 1
+                    if req.trace_id:
+                        self.tracer.mark(req.trace_id, "wal_replay",
+                                         entry_id=rec.entry_id)
                     handles.append(req)
                     done_ids.append(rec.entry_id)
                 flush_consumed()
@@ -778,4 +938,10 @@ class ClusteringService:
         snap["lanes"] = {name: lane.stats()
                          for name, lane in self.lanes.items()}
         snap["wal"] = self.wal.stats() if self.wal is not None else None
+        ws = self.metrics.window_stats()
+        snap["slo"] = self.slo.evaluate(
+            ws["latencies"], ws["failures"], ws["outcomes"])
+        snap["trace"] = self.tracer.stats()
+        snap["events"] = (self.events.stats()
+                          if self.events is not None else None)
         return snap

@@ -114,6 +114,9 @@ class WalRecord:
     priority: int = 1
     deadline: Optional[float] = None
     cache_key: Optional[str] = None
+    # the request's trace id rides in the entry so recover() continues the
+    # SAME trace across process death instead of minting a fresh one
+    trace_id: Optional[str] = None
 
 
 def _encode_data(data: np.ndarray) -> bytes:
@@ -170,9 +173,21 @@ class RequestLog:
         self.fsyncs = 0
         self.appended = 0          # ADMIT records written by this process
         self.compacted_segments = 0
+        # telemetry tap: on_event(name, fields) after compactions (never
+        # under the log lock, never raising into the append path)
+        self.on_event = None
         self._lock_key: Optional[str] = None
         self._acquire_lock()
         self._open()
+
+    def _notify(self, name: str, **fields: Any) -> None:
+        cb = self.on_event
+        if cb is None:
+            return
+        try:
+            cb(name, fields)
+        except Exception:
+            logger.exception("wal on_event hook raised for %s", name)
 
     # -- cross-process exclusivity ----------------------------------------------
 
@@ -449,7 +464,8 @@ class RequestLog:
                      priority: int = 1,
                      deadline: Optional[float] = None,
                      cache_key: Optional[str] = None,
-                     entry_id: Optional[int] = None) -> int:
+                     entry_id: Optional[int] = None,
+                     trace_id: Optional[str] = None) -> int:
         """Durably record one admitted request; returns its entry id
         (pass a :meth:`reserve_id` result to use a pre-published id)."""
         payload = _encode_data(np.asarray(data))
@@ -464,6 +480,7 @@ class RequestLog:
             "priority": int(priority),
             "deadline": deadline,
             "cache_key": cache_key,
+            "trace_id": trace_id,
             "shape": list(np.shape(data)),
         }
         self._append(_ADMIT, header, payload, admit_id=entry_id)
@@ -603,6 +620,7 @@ class RequestLog:
                     priority=int(header.get("priority", 1)),
                     deadline=header.get("deadline"),
                     cache_key=header.get("cache_key"),
+                    trace_id=header.get("trace_id"),
                 )
         return [admits[i] for i in sorted(admits)]
 
@@ -631,8 +649,11 @@ class RequestLog:
                 del self._seg_admits[seq]
                 dropped += 1
             self.compacted_segments += dropped
+            remaining = len(self._seg_admits)
         if dropped:
             _fsync_dir(self.root)
+            self._notify("wal_compaction", segments_dropped=dropped,
+                         segments_remaining=remaining)
         return dropped
 
     # -- lifecycle / stats -------------------------------------------------------
