@@ -577,6 +577,184 @@ def run_telemetry_gate(smoke: bool = False) -> Dict:
         shutil.rmtree(workdir, ignore_errors=True)
 
 
+def run_fleet_gate(smoke: bool = False) -> Dict:
+    """Fleet kill-failover gate: SIGKILL one of three workers holding
+    admitted-but-unbatched requests; a survivor must adopt its WAL.
+
+    A 3-worker fleet runs behind the consistent-hash router.  The victim
+    (worker-0) is configured to admit but never batch — its requests sit
+    exactly in the window the WAL protects — while the survivors serve a
+    mixed live load.  Victim tenants' requests are submitted in durable
+    mode (the RPC ACKs at WAL fsync), then the victim is SIGKILLed.  The
+    manager's failover makes a survivor replay the victim's WAL; every
+    admitted request must resolve with labels identical to an
+    uninterrupted single-process reference (per content hash — the same
+    loss accounting as the single-process recover gate), victim tenants
+    must re-place onto survivors, the victim's WAL must drain to zero
+    pending, and the fleet ``/metrics`` exposition must validate with
+    per-worker labeled series.
+    """
+    import urllib.request
+
+    import numpy as np
+
+    from repro.service import (
+        ClusteringService,
+        MiningClient,
+        content_key,
+        exposition_errors,
+    )
+    from repro.service.fleet import FleetRouter, WorkerManager
+    from repro.service.wal import RequestLog
+
+    n_victim = 3 if smoke else 6
+    n_live = 3 if smoke else 6
+
+    def make_data(i: int) -> "np.ndarray":
+        rng = np.random.default_rng(1000 + i)
+        centers = rng.uniform(-20.0, 20.0, size=(3, 2)).astype(np.float32)
+        return np.concatenate([
+            c + rng.normal(0.0, 0.5, size=(24, 2)).astype(np.float32)
+            for c in centers
+        ])
+
+    datasets = [make_data(i) for i in range(n_victim + n_live)]
+    all_params = [{"k": 3, "seed": 500 + i, "max_iters": 50}
+                  for i in range(n_victim + n_live)]
+
+    # uninterrupted single-process reference: labels per content hash
+    refdir = tempfile.mkdtemp(prefix="svc_fleet_ref_")
+    ref_labels: Dict[str, "np.ndarray"] = {}
+    try:
+        service = ClusteringService(refdir, max_batch=4, max_wait_s=0.005)
+        client = MiningClient(service=service)
+        with service:
+            handles = [client.submit("ref", "kmeans", d, params=p,
+                                     executor="jax-ref")
+                       for d, p in zip(datasets, all_params)]
+            for d, p, h in zip(datasets, all_params, handles):
+                ref_labels[content_key("kmeans", p, d)] = (
+                    h.result(300)["labels"])
+    finally:
+        shutil.rmtree(refdir, ignore_errors=True)
+
+    root = tempfile.mkdtemp(prefix="svc_fleet_gate_")
+    manager = WorkerManager(
+        root, 3,
+        worker_config={"max_batch": 4, "max_wait_s": 0.005},
+        # the victim admits but never batches: every one of its requests
+        # sits in the admission-to-batching window the WAL protects
+        overrides={"worker-0": {"max_batch": 64, "max_wait_s": 3600.0}},
+        heartbeat_interval=0.25)
+    manager.start()
+    router = FleetRouter(manager)
+    exporter = router.serve_metrics(0)
+    problems: List[str] = []
+    try:
+        victim_tenants = [t for t in (f"tenant-{i}" for i in range(200))
+                          if router.ring.primary(t) == "worker-0"
+                          ][:n_victim]
+        live_tenants = [t for t in (f"tenant-{i}" for i in range(200))
+                        if router.ring.primary(t) != "worker-0"][:n_live]
+
+        # durable admits on the victim first (sequential, so bounded-load
+        # never spills them off their idle primary): ACK = WAL fsync
+        victim_handles = []
+        for i, tenant in enumerate(victim_tenants):
+            h = router.submit(tenant, "kmeans", datasets[i],
+                              params=all_params[i], executor="jax-ref",
+                              durable=True)
+            ack = h.admitted(60)
+            victim_handles.append((h, ack))
+        admitted_at_victim = sum(
+            1 for _, ack in victim_handles if ack["worker"] == "worker-0")
+
+        # mixed live load on the survivors, still in flight at the kill
+        live_handles = [
+            router.submit(t, "kmeans", datasets[n_victim + j],
+                          params=all_params[n_victim + j],
+                          executor="jax-ref")
+            for j, t in enumerate(live_tenants)]
+
+        manager.fail_worker("worker-0")   # SIGKILL + synchronous failover
+
+        produced: Dict[str, "np.ndarray"] = {}
+        for j, h in enumerate(live_handles):
+            key = content_key("kmeans", all_params[n_victim + j],
+                              datasets[n_victim + j])
+            try:
+                produced[key] = h.result(300)["labels"]
+            except Exception as e:
+                print(f"# live request {h.tenant} failed: {e!r}",
+                      file=sys.stderr)
+        for h, ack in victim_handles:
+            try:
+                produced[ack["cache_key"]] = h.result(300)["labels"]
+            except Exception as e:
+                print(f"# victim-admitted request {h.tenant} failed: "
+                      f"{e!r}", file=sys.stderr)
+
+        lost = mismatched = 0
+        for key, ref in ref_labels.items():
+            got = produced.get(key)
+            if got is None:
+                lost += 1
+            elif not (got == ref).all():
+                mismatched += 1
+
+        takeover = manager.takeovers[0] if manager.takeovers else {}
+        replayed = int(takeover.get("replayed", 0))
+        if replayed < max(1, admitted_at_victim):
+            problems.append(
+                f"takeover replayed {replayed} of {admitted_at_victim} "
+                f"requests admitted at the victim")
+
+        replaced = {t: router.place(t) for t in victim_tenants}
+        if any(w == "worker-0" for w in replaced.values()):
+            problems.append(f"victim tenants not re-placed: {replaced}")
+
+        # the survivor's takeover must have drained the victim's log
+        wal = RequestLog(os.path.join(root, "worker-0", "wal"))
+        victim_pending = wal.pending()
+        wal.close()
+        if victim_pending:
+            problems.append(
+                f"victim WAL still has {victim_pending} pending admits")
+
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{exporter.port}/metrics",
+                timeout=30) as resp:
+            text = resp.read().decode("utf-8")
+        problems += [f"fleet exposition: {e}"
+                     for e in exposition_errors(text)]
+        for needle in (
+                'repro_fleet_worker_up{worker="worker-0"} 0.0',
+                'repro_fleet_worker_up{worker="worker-1"} 1.0',
+                'repro_fleet_worker_up{worker="worker-2"} 1.0',
+                'repro_fleet_worker_requests_total{worker="',
+                'repro_fleet_takeover_replayed_total{',
+                "repro_fleet_takeovers_total 1",
+        ):
+            if needle not in text:
+                problems.append(f"missing fleet series: {needle}")
+        return {
+            "admitted": n_victim + n_live,
+            "admitted_at_victim": admitted_at_victim,
+            "replayed": replayed,
+            "adopter": takeover.get("adopter"),
+            "lost": lost,
+            "mismatched": mismatched,
+            "victim_wal_pending": victim_pending,
+            "replaced": replaced,
+            "problems": problems,
+        }
+    finally:
+        exporter.stop()
+        router.close()
+        manager.stop()
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def build_parser() -> argparse.ArgumentParser:
     """The CLI surface (separate so the docs gate can introspect it)."""
     ap = argparse.ArgumentParser()
@@ -602,6 +780,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "exposition, a missing required series (per-stage "
                          "latency, per-executor joules, SLO burn rate), an "
                          "incomplete request trace, or dropped spans")
+    ap.add_argument("--fleet-gate", action="store_true",
+                    help="run ONLY the fleet failover gate: 3-worker fleet "
+                         "behind the consistent-hash router, SIGKILL one "
+                         "worker holding durably-admitted requests "
+                         "mid-batch, exit nonzero if the surviving "
+                         "workers lose any admitted request, produce "
+                         "labels differing from an uninterrupted "
+                         "reference, fail to re-place the victim's "
+                         "tenants, or emit a malformed fleet /metrics "
+                         "exposition")
     ap.add_argument("--recover-child", nargs=2, metavar=("WORKDIR", "N"),
                     help=argparse.SUPPRESS)   # internal: gate child mode
     return ap
@@ -638,6 +826,24 @@ def main() -> None:
             sys.exit(1)
         print("# telemetry gate: exposition parses, required series "
               "present, every trace complete, zero dropped spans")
+        return
+    if args.fleet_gate:
+        gate = run_fleet_gate(smoke=args.smoke)
+        print(f"# fleet gate: {gate['admitted']} admitted "
+              f"({gate['admitted_at_victim']} parked at the victim), "
+              f"{gate['replayed']} replayed by {gate['adopter']}, "
+              f"{gate['lost']} lost, {gate['mismatched']} mismatched, "
+              f"victim wal pending: {gate['victim_wal_pending']}")
+        if gate["lost"] or gate["mismatched"] or gate["problems"]:
+            for p in gate["problems"]:
+                print(f"# FAIL: {p}", file=sys.stderr)
+            if gate["lost"] or gate["mismatched"]:
+                print("# FAIL: fleet failover lost or corrupted admitted "
+                      "requests", file=sys.stderr)
+            sys.exit(1)
+        print("# fleet failover: SIGKILL lost zero admitted requests; "
+              "survivors replayed the victim's WAL and adopted its "
+              "tenants")
         return
     if args.bucket_sweep:
         rows = run_bucket_sweep(smoke=args.smoke)

@@ -179,11 +179,73 @@ def build_parser() -> argparse.ArgumentParser:
                          "replay admitted-but-unbatched requests from the "
                          "write-ahead admission log (admitted means "
                          "durable; implies --resume)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="run N worker processes behind the consistent-"
+                         "hash FleetRouter instead of one in-process "
+                         "service (each worker gets its own workdir + WAL "
+                         "under --workdir; 0 = single-process mode)")
+    ap.add_argument("--router-port", type=int, default=None,
+                    help="with --fleet: serve the fleet-level Prometheus "
+                         "exposition (repro_fleet_* with a worker label; "
+                         "also /snapshot and cross-worker /trace) on this "
+                         "port; 0 binds an ephemeral port and prints it")
     return ap
+
+
+def run_fleet(args) -> None:
+    """--fleet N: the same workload through N worker processes behind the
+    consistent-hash router, then the fleet scorecard."""
+    from repro.service.fleet import FleetRouter, WorkerManager
+
+    worker_config = {
+        "max_batch": args.max_batch,
+        "max_wait_s": args.max_wait_ms / 1000.0,
+        "bucket_policy": args.bucket_policy,
+    }
+    if args.device_budget_mb is not None:
+        worker_config["device_budget_bytes"] = args.device_budget_mb * 2**20
+    manager = WorkerManager(args.workdir, args.fleet,
+                            worker_config=worker_config)
+    manager.start()
+    router = FleetRouter(manager)
+    exporter = None
+    try:
+        if args.router_port is not None:
+            exporter = router.serve_metrics(args.router_port)
+            print(f"# fleet telemetry: "
+                  f"http://127.0.0.1:{exporter.port}/metrics")
+        workload = build_workload(
+            args.requests, args.tenants, args.algo,
+            features=args.features, clusters=args.clusters,
+            points=args.points, oversized=args.oversized,
+            oversized_points=args.oversized_points)
+        executor = None if args.executor == "auto" else args.executor
+        failures = drive(router, workload, args.rate, executor,
+                         ttl=args.ttl)
+        snap = router.metrics_snapshot()
+        fleet = snap["fleet"]
+        print(json.dumps(fleet, indent=2, default=str))
+        per_worker = {
+            name: (ws.get("totals") or {}).get("requests", 0)
+            for name, ws in snap["workers"].items()}
+        print(f"# fleet: {fleet['alive']}/{fleet['n_workers']} workers "
+              f"alive, requests per worker {per_worker}, "
+              f"router {fleet['router']['submitted']} submitted / "
+              f"{fleet['router']['retries']} retries / "
+              f"{fleet['router']['spills']} bounded-load spills, "
+              f"failures {failures}")
+    finally:
+        if exporter is not None:
+            exporter.stop()
+        router.close()
+        manager.stop()
 
 
 def main() -> None:
     args = build_parser().parse_args()
+    if args.fleet:
+        run_fleet(args)
+        return
 
     backend_mod.load()
     service = ClusteringService(

@@ -41,6 +41,9 @@ estimates are decided (and persisted) before any data moves.
     telemetry — Prometheus exposition + HTTP exporter, rotating JSONL
                 event log, SLO burn-rate evaluation
     service   — the engine tying it together (executor lane pool)
+    fleet     — the horizontal tier: N worker processes behind a
+                consistent-hash router, heartbeat-supervised, with
+                WAL-replay failover (admitted means durable, fleet-wide)
 """
 
 from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
@@ -95,8 +98,24 @@ from repro.service.trace import (
     read_spans,
 )
 from repro.service.wal import RequestLog, WalLocked, WalRecord
+from repro.service.fleet import (
+    ConsistentHashRing,
+    FleetHandle,
+    FleetRouter,
+    FleetStream,
+    FleetWorker,
+    WorkerManager,
+    render_fleet_prometheus,
+)
 
 __all__ = [
+    "ConsistentHashRing",
+    "FleetHandle",
+    "FleetRouter",
+    "FleetStream",
+    "FleetWorker",
+    "WorkerManager",
+    "render_fleet_prometheus",
     "AdaptivePolicy",
     "AdmissionQueue",
     "BacklogFull",

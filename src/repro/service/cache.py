@@ -12,7 +12,11 @@ service answers repeat queries from a warm cache instead of recomputing,
 the same restart story the job checkpoints give in-flight batches.  Spill
 files older than ``ttl_s`` are treated as absent and unlinked lazily;
 memory-LRU eviction does NOT remove the spill file (disk is the larger,
-slower tier — TTL is its only eviction).
+slower tier).  Disk eviction is TTL plus — with ``max_disk_bytes`` set —
+an LRU size bound: when the spill dir grows past the bound, a background
+sweep unlinks the least-recently-used files (mtime order; disk hits
+touch their file) until it fits again, so a long-lived worker's spill
+tier cannot grow without limit.
 """
 
 from __future__ import annotations
@@ -62,20 +66,28 @@ class ResultCache:
     """LRU over result dicts (labels + scalars), keyed by content hash.
 
     ``spill_dir`` enables the disk tier; ``ttl_s`` bounds a spilled entry's
-    age (None = spilled entries never expire).
+    age (None = spilled entries never expire); ``max_disk_bytes`` bounds
+    the spill dir's total size with an LRU sweep (None = unbounded).
     """
 
     def __init__(self, max_entries: int = 256, *,
                  spill_dir: Optional[str] = None,
-                 ttl_s: Optional[float] = None) -> None:
+                 ttl_s: Optional[float] = None,
+                 max_disk_bytes: Optional[int] = None) -> None:
         self.max_entries = max_entries
         self.spill_dir = spill_dir
         self.ttl_s = ttl_s
+        self.max_disk_bytes = (None if max_disk_bytes is None
+                               else max(0, int(max_disk_bytes)))
         self._lock = threading.Lock()
         self._entries: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.disk_hits = 0
+        self.disk_evictions = 0
+        # at most one background sweep in flight; spills that find it busy
+        # skip — the running sweep re-reads the dir and covers them
+        self._sweeping = threading.Lock()
 
     # -- disk tier -----------------------------------------------------------
 
@@ -116,6 +128,72 @@ class ResultCache:
                 os.unlink(tmp)
             except OSError:
                 pass
+        self._maybe_sweep()
+
+    # -- disk size bound -----------------------------------------------------
+
+    def _maybe_sweep(self) -> None:
+        """Kick a background LRU sweep of the spill dir (non-blocking)."""
+        if self.max_disk_bytes is None or self.spill_dir is None:
+            return
+        if not self._sweeping.acquire(blocking=False):
+            return                       # a sweep is already running
+        t = threading.Thread(target=self._sweep_and_release,
+                             name="cache-disk-sweep", daemon=True)
+        t.start()
+
+    def _sweep_and_release(self) -> None:
+        try:
+            self.sweep_disk()
+        finally:
+            self._sweeping.release()
+
+    def sweep_disk(self) -> int:
+        """Unlink least-recently-used spill files until the tier fits
+        ``max_disk_bytes``; returns the number evicted.  Disk *hits*
+        touch their file's mtime (see :meth:`_load_spilled`), so mtime
+        order IS recency order.  Safe to call concurrently with serving:
+        a racing get simply misses to recompute."""
+        if self.max_disk_bytes is None or self.spill_dir is None:
+            return 0
+        try:
+            with os.scandir(self.spill_dir) as it:
+                files = [(e.path, e.stat().st_mtime, e.stat().st_size)
+                         for e in it
+                         if e.is_file() and e.name.endswith(".npz")]
+        except OSError:
+            return 0
+        total = sum(size for _, _, size in files)
+        if total <= self.max_disk_bytes:
+            return 0
+        evicted = 0
+        for path, _mtime, size in sorted(files, key=lambda f: f[1]):
+            if total <= self.max_disk_bytes:
+                break
+            try:
+                os.unlink(path)
+            except OSError:
+                continue
+            total -= size
+            evicted += 1
+        with self._lock:
+            self.disk_evictions += evicted
+        return evicted
+
+    def disk_usage(self) -> Dict[str, int]:
+        """Spill-tier footprint (files, bytes); zeros when disabled."""
+        if self.spill_dir is None:
+            return {"disk_files": 0, "disk_bytes": 0}
+        files = total = 0
+        try:
+            with os.scandir(self.spill_dir) as it:
+                for e in it:
+                    if e.is_file() and e.name.endswith(".npz"):
+                        files += 1
+                        total += e.stat().st_size
+        except OSError:
+            pass
+        return {"disk_files": files, "disk_bytes": total}
 
     def _load_spilled(self, key: str) -> Optional[Dict[str, Any]]:
         path = self._spill_path(key)
@@ -136,6 +214,12 @@ class ResultCache:
                 for name in z.files:
                     if name != _SCALARS_LEAF:
                         result[name] = z[name]
+            try:
+                # a disk hit refreshes recency, so the size-bound sweep
+                # (mtime order) evicts cold entries, not popular ones
+                os.utime(path)
+            except OSError:
+                pass
             return result
         except Exception:
             try:
@@ -184,10 +268,16 @@ class ResultCache:
             return len(self._entries)
 
     def stats(self) -> Dict[str, int]:
+        usage = self.disk_usage()
         with self._lock:
-            return {
+            out = {
                 "entries": len(self._entries),
                 "hits": self.hits,
                 "misses": self.misses,
                 "disk_hits": self.disk_hits,
+                "disk_evictions": self.disk_evictions,
             }
+        out.update(usage)
+        if self.max_disk_bytes is not None:
+            out["max_disk_bytes"] = self.max_disk_bytes
+        return out

@@ -135,11 +135,14 @@ class MiningClient:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def close(self, preempt: bool = False) -> None:
+    def close(self, preempt: bool = False, drain: bool = False) -> None:
         """Stop an owned engine (fails all pending handles); attached
-        engines are left running for their owner."""
+        engines are left running for their owner.  ``drain=True`` first
+        stops admitting (new submits bounce with a retryable
+        ``BacklogFull``) and lets queued + in-flight work finish, so a
+        rolling restart hands over a clean, fully-consumed WAL."""
         if self._owns_service:
-            self.service.stop(preempt=preempt)
+            self.service.stop(preempt=preempt, drain=drain)
 
     # -- the async API -------------------------------------------------------
 
@@ -204,15 +207,32 @@ class MiningClient:
         """Complete batches a previous (killed) process left SUSPENDED."""
         return self.service.resume_suspended()
 
-    def recover(self) -> Dict[str, Any]:
+    def recover(self, *, replay_rate: Optional[float] = None,
+                replay_burst: int = 8) -> Dict[str, Any]:
         """Full restart path: resume suspended batches, then replay every
         admitted-but-unbatched request from the write-ahead admission log.
+
+        ``replay_rate`` (requests/s, ``replay_burst`` token bucket) shapes
+        the replay so a recovery storm shares admission with live traffic
+        instead of instantly tripping ``BacklogFull``.
 
         Returns the engine's recovery summary with ``requests`` wrapped as
         :class:`ResultHandle` futures — wait on them to drive the replayed
         work to completion (replays of already-completed content are cache
         hits and resolve instantly).
         """
-        summary = self.service.recover()
+        summary = self.service.recover(replay_rate=replay_rate,
+                                       replay_burst=replay_burst)
+        summary["requests"] = [ResultHandle(r) for r in summary["requests"]]
+        return summary
+
+    def replay_foreign(self, wal_root: str, *,
+                       replay_rate: Optional[float] = None,
+                       replay_burst: int = 8) -> Dict[str, Any]:
+        """Failover takeover: replay a dead peer's admission log through
+        this client's engine (see the engine method for the durability
+        ordering).  Raises ``WalLocked`` while the peer is still alive."""
+        summary = self.service.replay_foreign(
+            wal_root, replay_rate=replay_rate, replay_burst=replay_burst)
         summary["requests"] = [ResultHandle(r) for r in summary["requests"]]
         return summary

@@ -1,0 +1,40 @@
+"""Fleet tier: N service processes behind one consistent-hash front door.
+
+The single-process :class:`~repro.service.ClusteringService` is crash-safe
+(WAL), self-tuning (bucketing), and observable (tracing/telemetry); this
+package makes *processes* the next schedulable resource:
+
+- :class:`~repro.service.fleet.manager.WorkerManager` — spawn/supervise N
+  worker processes (own workdir + WAL lock each), heartbeat them, SIGKILL
+  the wedged, and fail over a dead worker's WAL onto a survivor.
+- :class:`~repro.service.fleet.router.FleetRouter` — MiningClient-shaped
+  submit/result API with bounded-load consistent-hash tenant placement,
+  typed retry/backoff, sticky streaming tenants, and fleet-level
+  metrics/trace fan-out (``repro_fleet_*`` with a ``worker`` label).
+- :class:`~repro.service.fleet.hashring.ConsistentHashRing` — the
+  placement structure (stable under join/leave, hot tenants spill).
+- :mod:`~repro.service.fleet.worker` — the worker process entry point and
+  its RPC door; :mod:`~repro.service.fleet.rpc` — the stdlib-only framed
+  numpy-over-HTTP transport with typed error mapping.
+"""
+
+from repro.service.fleet.hashring import ConsistentHashRing
+from repro.service.fleet.manager import WorkerManager, WorkerSpec
+from repro.service.fleet.router import (FleetHandle, FleetRouter,
+                                        FleetStream,
+                                        render_fleet_prometheus)
+from repro.service.fleet.rpc import RemoteError, RpcError
+from repro.service.fleet.worker import FleetWorker
+
+__all__ = [
+    "ConsistentHashRing",
+    "FleetHandle",
+    "FleetRouter",
+    "FleetStream",
+    "FleetWorker",
+    "RemoteError",
+    "RpcError",
+    "WorkerManager",
+    "WorkerSpec",
+    "render_fleet_prometheus",
+]

@@ -1,0 +1,344 @@
+"""WorkerManager: spawn, supervise, and fail over fleet worker processes.
+
+The manager owns the fleet's *lifecycle* half (the router owns routing):
+
+- **Spawn.**  N worker processes (``python -m repro.service.fleet.worker``),
+  each over its own workdir ``<root>/<name>/`` — so each holds its own
+  WAL single-writer lock.  A worker announces its ephemeral RPC port by
+  writing an announce file atomically; the manager blocks on those files
+  at start.
+- **Heartbeat.**  A supervisor thread polls every worker: first
+  ``Popen.poll()`` (an exited process needs no timeout to be declared
+  dead), then ``GET /healthz`` with a short timeout.  The health payload
+  (queue depth, WAL pending, SLO burn, energy) is cached on the spec —
+  the router reads it for placement, operators via ``fleet_snapshot()``.
+- **Failover.**  A worker that misses ``miss_deadline`` seconds of
+  heartbeats is SIGKILLed (a wedged process must not keep its WAL lock on
+  life support), then — as for any dead worker — the manager picks the
+  least-loaded survivor and POSTs ``/takeover`` with the victim's WAL
+  root.  The survivor's :meth:`ClusteringService.replay_foreign` replays
+  every unconsumed admit through its own front door, making "admitted
+  means durable" a *fleet-level* guarantee.  ``WalLocked`` during the
+  race with the victim's death is retryable and retried.
+
+Death and takeover are announced to subscribers (``on_death``) so the
+router can drop the victim from the hash ring and re-pin sticky tenants
+to the adopter before the takeover replay even lands.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.service.fleet import rpc
+from repro.service.wal import WalLocked
+
+logger = logging.getLogger(__name__)
+
+
+class WorkerSpec:
+    """One supervised worker process, as the manager sees it."""
+
+    def __init__(self, name: str, workdir: str) -> None:
+        self.name = name
+        self.workdir = workdir
+        self.host = "127.0.0.1"
+        self.port = 0
+        self.pid: Optional[int] = None
+        self.proc: Optional[subprocess.Popen] = None
+        self.alive = False
+        self.last_ok = 0.0
+        self.health: Dict[str, Any] = {}
+        self.adopter: Optional[str] = None   # who took over our WAL
+
+    @property
+    def wal_root(self) -> str:
+        return os.path.join(self.workdir, "wal")
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "workdir": self.workdir,
+                "host": self.host, "port": self.port, "pid": self.pid,
+                "alive": self.alive, "adopter": self.adopter,
+                "health": dict(self.health)}
+
+
+def _src_pythonpath() -> str:
+    """The spawned worker must import the same ``repro`` this process
+    runs, regardless of how the parent was launched."""
+    import repro
+    # repro is a namespace package (no __init__.py): __file__ is None,
+    # the import root is the parent of its __path__ entry
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    existing = os.environ.get("PYTHONPATH", "")
+    return f"{src}{os.pathsep}{existing}" if existing else src
+
+
+class WorkerManager:
+    """Spawns and supervises N worker processes under one fleet root.
+
+    ``worker_config`` is the ClusteringService kwargs every worker gets;
+    ``overrides`` maps a worker name to kwargs merged on top (used by
+    tests and the CI gate to give one worker a distinct batching shape).
+    ``replay_rate`` shapes takeover replays (tokens/s; None = full rate).
+    """
+
+    def __init__(self, root: str, n_workers: int = 2, *,
+                 worker_config: Optional[Dict[str, Any]] = None,
+                 overrides: Optional[Dict[str, Dict[str, Any]]] = None,
+                 heartbeat_interval: float = 0.5,
+                 miss_deadline: Optional[float] = None,
+                 replay_rate: Optional[float] = None,
+                 spawn_timeout: float = 30.0) -> None:
+        if n_workers < 1:
+            raise ValueError("a fleet needs at least one worker")
+        self.root = root
+        self.n_workers = int(n_workers)
+        self.worker_config = dict(worker_config or {})
+        self.overrides = {k: dict(v) for k, v in (overrides or {}).items()}
+        self.heartbeat_interval = float(heartbeat_interval)
+        self.miss_deadline = (float(miss_deadline) if miss_deadline
+                              is not None else 6 * self.heartbeat_interval)
+        self.replay_rate = replay_rate
+        self.spawn_timeout = float(spawn_timeout)
+        self.workers: Dict[str, WorkerSpec] = {}
+        self.takeovers: List[Dict[str, Any]] = []
+        self._subscribers: List[Callable[[str, Optional[str]], None]] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+
+    # -- membership events ---------------------------------------------------
+
+    def on_death(self, fn: Callable[[str, Optional[str]], None]) -> None:
+        """Subscribe ``fn(victim_name, adopter_name)`` — called when a
+        worker is declared dead, *before* the takeover replay runs, so
+        routing updates don't wait on replay I/O."""
+        self._subscribers.append(fn)
+
+    def _announce_death(self, victim: str, adopter: Optional[str]) -> None:
+        for fn in list(self._subscribers):
+            try:
+                fn(victim, adopter)
+            except Exception:
+                logger.exception("fleet death subscriber raised")
+
+    # -- spawn ---------------------------------------------------------------
+
+    def _spawn(self, name: str) -> WorkerSpec:
+        spec = WorkerSpec(name, os.path.join(self.root, name))
+        os.makedirs(spec.workdir, exist_ok=True)
+        announce = os.path.join(self.root, f"{name}.announce.json")
+        try:
+            os.unlink(announce)
+        except OSError:
+            pass
+        cfg = dict(self.worker_config)
+        cfg.update(self.overrides.get(name, {}))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = _src_pythonpath()
+        spec.proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.service.fleet.worker",
+             "--workdir", spec.workdir, "--announce", announce,
+             "--name", name, "--config", json.dumps(cfg)],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+        deadline = time.monotonic() + self.spawn_timeout
+        while time.monotonic() < deadline:
+            if spec.proc.poll() is not None:
+                raise RuntimeError(
+                    f"fleet worker {name} exited with "
+                    f"{spec.proc.returncode} before announcing")
+            try:
+                with open(announce) as f:
+                    info = json.load(f)
+                break
+            except (OSError, ValueError):
+                time.sleep(0.05)
+        else:
+            spec.proc.kill()
+            raise RuntimeError(
+                f"fleet worker {name} did not announce within "
+                f"{self.spawn_timeout:.0f}s")
+        spec.host, spec.port = info["host"], int(info["port"])
+        spec.pid = int(info["pid"])
+        spec.alive = True
+        spec.last_ok = time.monotonic()
+        return spec
+
+    def start(self) -> "WorkerManager":
+        if self._running:
+            return self
+        os.makedirs(self.root, exist_ok=True)
+        for i in range(self.n_workers):
+            name = f"worker-{i}"
+            self.workers[name] = self._spawn(name)
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._heartbeat_loop,
+                                        name="fleet-heartbeat", daemon=True)
+        self._thread.start()
+        self._running = True
+        return self
+
+    # -- supervision ---------------------------------------------------------
+
+    def live_workers(self) -> List[WorkerSpec]:
+        with self._lock:
+            return [w for w in self.workers.values() if w.alive]
+
+    def worker(self, name: str) -> WorkerSpec:
+        return self.workers[name]
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.wait(self.heartbeat_interval):
+            for spec in list(self.workers.values()):
+                if not spec.alive:
+                    continue
+                # an exited process is dead without waiting out a timeout
+                if spec.proc is not None and spec.proc.poll() is not None:
+                    self._declare_dead(spec, reason="exited")
+                    continue
+                try:
+                    health = rpc.get_json(
+                        spec.host, spec.port, "/healthz",
+                        timeout=max(0.2, self.heartbeat_interval))
+                except (rpc.RpcError, rpc.RemoteError):
+                    if (time.monotonic() - spec.last_ok
+                            > self.miss_deadline):
+                        self._kill(spec)
+                        self._declare_dead(spec, reason="missed heartbeats")
+                    continue
+                spec.health = health
+                spec.last_ok = time.monotonic()
+
+    def _kill(self, spec: WorkerSpec) -> None:
+        """SIGKILL, not SIGTERM: a worker that stopped heartbeating may be
+        wedged holding its WAL lock — only process death releases it."""
+        if spec.proc is not None:
+            try:
+                spec.proc.kill()
+            except OSError:
+                pass
+
+    def _declare_dead(self, spec: WorkerSpec, *, reason: str) -> None:
+        with self._lock:
+            if not spec.alive:
+                return
+            spec.alive = False
+        # the lock must actually be free before a survivor can adopt the
+        # WAL — reap the corpse first (kill() above, or a natural exit)
+        if spec.proc is not None:
+            try:
+                spec.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:  # pragma: no cover - wedged
+                logger.error("fleet worker %s refused to die", spec.name)
+        adopter = self._pick_adopter()
+        spec.adopter = adopter.name if adopter is not None else None
+        logger.warning("fleet worker %s dead (%s); adopter=%s",
+                       spec.name, reason, spec.adopter)
+        self._announce_death(spec.name, spec.adopter)
+        if adopter is not None:
+            self._takeover(spec, adopter, reason=reason)
+
+    def _pick_adopter(self) -> Optional[WorkerSpec]:
+        """Least-loaded survivor (last heartbeat's queue depth) adopts."""
+        live = self.live_workers()
+        if not live:
+            return None
+        return min(live, key=lambda w: (
+            int(w.health.get("queue_depth", 0))
+            + int(w.health.get("inflight", 0))))
+
+    def _takeover(self, victim: WorkerSpec, adopter: WorkerSpec, *,
+                  reason: str) -> None:
+        record: Dict[str, Any] = {
+            "victim": victim.name, "adopter": adopter.name,
+            "reason": reason, "wal_root": victim.wal_root}
+        body = {"wal_root": victim.wal_root}
+        if self.replay_rate is not None:
+            body["replay_rate"] = self.replay_rate
+        for attempt in range(10):
+            try:
+                summary = rpc.post_json(adopter.host, adopter.port,
+                                        "/takeover", body, timeout=120.0)
+            except WalLocked as exc:
+                # racing the victim's death: the kernel releases the lock
+                # when the process is fully gone — back off and retry
+                time.sleep(exc.retry_after)
+                continue
+            except (rpc.RpcError, rpc.RemoteError) as exc:
+                record["error"] = repr(exc)
+                time.sleep(0.2 * (attempt + 1))
+                continue
+            record.update(summary)
+            record.pop("error", None)
+            break
+        self.takeovers.append(record)
+
+    # -- operator controls ---------------------------------------------------
+
+    def fail_worker(self, name: str) -> None:
+        """Test/gate hook: SIGKILL a worker NOW and run the failover path
+        synchronously instead of waiting for the heartbeat loop to notice
+        (the loop's poll() would find the corpse anyway)."""
+        spec = self.workers[name]
+        self._kill(spec)
+        self._declare_dead(spec, reason="killed by operator")
+
+    def fleet_snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            workers = {n: s.as_dict() for n, s in self.workers.items()}
+        alive = sum(1 for w in workers.values() if w["alive"])
+        return {
+            "workers": workers,
+            "n_workers": len(workers),
+            "alive": alive,
+            "dead": len(workers) - alive,
+            "takeovers": [dict(t) for t in self.takeovers],
+        }
+
+    def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
+        """SIGTERM every live worker (they drain-stop: finish in-flight,
+        consume WAL entries, release locks), escalating to SIGKILL past
+        ``timeout``.  ``drain=False`` goes straight to SIGKILL."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        procs = [s.proc for s in self.workers.values()
+                 if s.proc is not None and s.proc.poll() is None]
+        if drain:
+            for p in procs:
+                try:
+                    p.send_signal(signal.SIGTERM)
+                except OSError:
+                    pass
+            deadline = time.monotonic() + timeout
+            for p in procs:
+                try:
+                    p.wait(timeout=max(0.1, deadline - time.monotonic()))
+                except subprocess.TimeoutExpired:
+                    pass
+        for p in procs:
+            if p.poll() is None:
+                try:
+                    p.kill()
+                    p.wait(timeout=5)
+                except (OSError, subprocess.TimeoutExpired):
+                    pass
+        for spec in self.workers.values():
+            spec.alive = False
+        self._running = False
+
+    def __enter__(self) -> "WorkerManager":
+        return self.start()
+
+    def __exit__(self, *_exc: Any) -> None:
+        self.stop()

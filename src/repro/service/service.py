@@ -157,6 +157,7 @@ class ClusteringService:
         cache_entries: int = 256,
         cache_spill: bool = True,
         cache_ttl_s: Optional[float] = 3600.0,
+        max_disk_cache_bytes: Optional[int] = None,
         wal: bool = True,
         wal_segment_bytes: int = 4 << 20,
         registry: Optional[ParadigmRegistry] = None,
@@ -217,7 +218,8 @@ class ClusteringService:
             max_entries=cache_entries,
             spill_dir=(os.path.join(workdir, "cache") if cache_spill
                        else None),
-            ttl_s=cache_ttl_s)
+            ttl_s=cache_ttl_s,
+            max_disk_bytes=max_disk_cache_bytes)
         # write-ahead admission log: every request is durably recorded
         # before it enters the in-memory queue, and marked consumed once
         # its batch job's step-0 checkpoint exists — "admitted means
@@ -254,6 +256,7 @@ class ClusteringService:
         self._lock = threading.Lock()
         self._running = False
         self._stopped = False
+        self._draining = False
         self._dispatcher: Optional[threading.Thread] = None
 
     def _req_oversized(self, req: MiningRequest) -> bool:
@@ -328,6 +331,7 @@ class ClusteringService:
         self.token.reset()
         self._running = True
         self._stopped = False
+        self._draining = False
         self.lanes = {name: ExecutorLane(name)
                       for name in self.registry.names()}
         for lane in self.lanes.values():
@@ -347,19 +351,49 @@ class ClusteringService:
     def __exit__(self, *exc) -> None:
         self.stop()
 
-    def stop(self, preempt: bool = False, timeout: float = 30.0) -> None:
+    def stop(self, preempt: bool = False, timeout: float = 30.0,
+             drain: bool = False) -> None:
         """Graceful stop drains everything staged; ``preempt=True`` is the
         OS-suspend path — in-flight batches checkpoint and SUSPEND.  Either
         way, every request handle still pending when the threads are gone is
-        failed, so no caller blocked in ``wait()`` outlives the service."""
+        failed, so no caller blocked in ``wait()`` outlives the service.
+
+        ``drain=True`` is the zero-downtime variant (rolling restarts,
+        fleet failover): admission closes first (new submits bounce with
+        a retryable :class:`BacklogFull` so a router sends them
+        elsewhere), then everything already admitted — queued, staged, or
+        in flight — runs to completion within ``timeout``, marking its
+        WAL entries consumed through the normal durable path.  Only then
+        do the threads stop and the WAL lock release, so a successor
+        process inherits an (ideally) empty log instead of a replay.
+        Whatever misses the deadline falls back to the graceful-stop
+        contract: failed with ``resubmit=True``, WAL entry kept live.
+        """
+        deadline = time.monotonic() + timeout
+        if drain and not preempt and self._running:
+            with self._lock:
+                self._draining = True
+            # the dispatcher/lanes are still running: the admission queue
+            # empties through normal batching while we wait for the
+            # in-flight table (which covers queued AND executing requests)
+            # to go quiet
+            while time.monotonic() < deadline:
+                with self._lock:
+                    busy = bool(self._inflight)
+                if not busy and len(self.queue) == 0:
+                    break
+                time.sleep(self.poll_interval * 5)
+            # a drain that ate the whole budget still owes the threads a
+            # real join window — never hand them join(0)
+            deadline = max(deadline, time.monotonic() + 5.0)
         if preempt:
             self.token.cancel(CancelReason.PREEMPTION)
         self._running = False
         with self._lock:
             self._stopped = True
-        # join budget on the monotonic clock: a wall-clock step (NTP, DST)
-        # must not stretch or starve the shutdown timeout
-        deadline = time.monotonic() + timeout
+        # join budget on the monotonic clock (shared with the drain wait
+        # above): a wall-clock step (NTP, DST) must not stretch or starve
+        # the shutdown timeout
         if self._dispatcher is not None:
             self._dispatcher.join(max(0.0, deadline - time.monotonic()))
             self._dispatcher = None
@@ -419,6 +453,14 @@ class ClusteringService:
         ttl: Optional[float] = None,
         trace_id: Optional[str] = None,
     ) -> MiningRequest:
+        if self._draining:
+            # drain means "finish what you have, accept nothing new" —
+            # and the rejection must be RETRYABLE so a fleet router sends
+            # the request to another worker instead of failing the caller
+            raise BacklogFull(
+                "service is draining (rolling restart / failover); "
+                "resubmit elsewhere", tenant=tenant,
+                depth=len(self.queue), limit=0, retry_after=0.1)
         data = np.ascontiguousarray(np.asarray(data, np.float32))
         now_w = time.time()
         if ttl is not None:
@@ -832,7 +874,87 @@ class ClusteringService:
                         self.cache.put(ckey, result)
         return outcomes
 
-    def recover(self) -> Dict[str, Any]:
+    def _replay_records(self, records, consume_log, *,
+                        replay_rate: Optional[float] = None,
+                        replay_burst: int = 8,
+                        skip_ids: "frozenset[int] | set" = frozenset(),
+                        ) -> Dict[str, Any]:
+        """Resubmit WAL records through the front door; the shared engine
+        of :meth:`recover` (own log) and :meth:`replay_foreign` (a dead
+        peer's log).  Entries are marked consumed in ``consume_log`` only
+        after their resubmission is durable under a fresh entry, so a
+        crash mid-replay at worst replays twice, never zero times.
+
+        ``replay_rate`` throttles resubmission through a token bucket
+        (``replay_burst`` capacity, ``replay_rate`` tokens/s): a failover
+        storm re-enters admission smoothly instead of instantly tripping
+        ``BacklogFull`` for live traffic.  None = unthrottled.
+        """
+        handles: List[MiningRequest] = []
+        replayed = cache_hits = rejected = 0
+        # old entries are consumed in chunks AFTER their resubmissions
+        # are durable under fresh entries: per-entry consumes would
+        # pay a serial fsync each (2N syncs for N replays); chunking
+        # keeps recovery ~N syncs at the cost of a bounded
+        # at-least-once window if recovery itself crashes mid-chunk
+        done_ids: List[int] = []
+
+        def flush_consumed(force: bool = False) -> None:
+            if done_ids and (force or len(done_ids) >= 32):
+                consume_log.mark_consumed(done_ids)
+                done_ids.clear()
+
+        burst = float(max(1, replay_burst))
+        tokens, refilled = burst, time.monotonic()
+        for rec in records:
+            if rec.entry_id in skip_ids:
+                continue
+            if replay_rate is not None and replay_rate > 0:
+                now = time.monotonic()
+                tokens = min(burst, tokens + (now - refilled) * replay_rate)
+                refilled = now
+                if tokens < 1.0:
+                    time.sleep((1.0 - tokens) / replay_rate)
+                    tokens, refilled = 1.0, time.monotonic()
+                tokens -= 1.0
+            try:
+                # the replay continues the ORIGINAL trace: one trace id
+                # spans both process lifetimes (submit in the dead
+                # process, replay + execution here)
+                req = self._submit(
+                    rec.tenant, rec.algo, rec.data, params=rec.params,
+                    executor=rec.executor, priority=rec.priority,
+                    deadline=rec.deadline, trace_id=rec.trace_id)
+            except (BacklogFull, RateLimited):
+                # transient door pressure: keep the entry live — a
+                # later recover() re-offers it instead of losing it
+                rejected += 1
+                continue
+            except Exception:
+                # poisoned entry (validation/too-large): replaying it
+                # again can never succeed, so consume it
+                rejected += 1
+                done_ids.append(rec.entry_id)
+            else:
+                replayed += 1
+                if req.cache_hit:
+                    cache_hits += 1
+                if req.trace_id:
+                    self.tracer.mark(req.trace_id, "wal_replay",
+                                     entry_id=rec.entry_id)
+                handles.append(req)
+                done_ids.append(rec.entry_id)
+            flush_consumed()
+        flush_consumed(force=True)
+        return {
+            "requests": handles,
+            "replayed": replayed,
+            "cache_hits": cache_hits,
+            "rejected": rejected,
+        }
+
+    def recover(self, *, replay_rate: Optional[float] = None,
+                replay_burst: int = 8) -> Dict[str, Any]:
         """Full restart path: resume suspended batches, then replay every
         admitted-but-unbatched request from the write-ahead admission log.
 
@@ -846,6 +968,10 @@ class ClusteringService:
         the resubmission is durable under a fresh entry, so a crash
         *during* recovery at worst replays twice, never zero times.
 
+        ``replay_rate`` (requests/s, with a ``replay_burst`` token
+        bucket) shapes the replay so a recovery storm shares admission
+        smoothly with live traffic instead of tripping ``BacklogFull``.
+
         Returns a summary: ``outcomes`` (resumed batch results),
         ``requests`` (handles for the replayed submissions — wait on them
         to drive the replay to completion), and counters
@@ -856,8 +982,8 @@ class ClusteringService:
         are consumed on rejection.
         """
         outcomes = self.resume_suspended()
-        handles: List[MiningRequest] = []
-        replayed = cache_hits = rejected = 0
+        summary: Dict[str, Any] = {
+            "requests": [], "replayed": 0, "cache_hits": 0, "rejected": 0}
         if self.wal is not None:
             records = self.wal.replay()
             # entries backing requests still alive in THIS process must
@@ -869,59 +995,53 @@ class ClusteringService:
             with self._lock:
                 inflight_ids = {r.wal_id for r in self._inflight.values()
                                 if r.wal_id is not None}
-            # old entries are consumed in chunks AFTER their resubmissions
-            # are durable under fresh entries: per-entry consumes would
-            # pay a serial fsync each (2N syncs for N replays); chunking
-            # keeps recovery ~N syncs at the cost of a bounded
-            # at-least-once window if recovery itself crashes mid-chunk
-            done_ids: List[int] = []
-
-            def flush_consumed(force: bool = False) -> None:
-                if done_ids and (force or len(done_ids) >= 32):
-                    self.wal.mark_consumed(done_ids)
-                    done_ids.clear()
-
-            for rec in records:
-                if rec.entry_id in inflight_ids:
-                    continue
-                try:
-                    # the replay continues the ORIGINAL trace: one trace id
-                    # spans both process lifetimes (submit in the dead
-                    # process, replay + execution here)
-                    req = self._submit(
-                        rec.tenant, rec.algo, rec.data, params=rec.params,
-                        executor=rec.executor, priority=rec.priority,
-                        deadline=rec.deadline, trace_id=rec.trace_id)
-                except (BacklogFull, RateLimited):
-                    # transient door pressure: keep the entry live — a
-                    # later recover() re-offers it instead of losing it
-                    rejected += 1
-                    continue
-                except Exception:
-                    # poisoned entry (validation/too-large): replaying it
-                    # again can never succeed, so consume it
-                    rejected += 1
-                    done_ids.append(rec.entry_id)
-                else:
-                    replayed += 1
-                    if req.cache_hit:
-                        cache_hits += 1
-                    if req.trace_id:
-                        self.tracer.mark(req.trace_id, "wal_replay",
-                                         entry_id=rec.entry_id)
-                    handles.append(req)
-                    done_ids.append(rec.entry_id)
-                flush_consumed()
-            flush_consumed(force=True)
+            summary = self._replay_records(
+                records, self.wal, replay_rate=replay_rate,
+                replay_burst=replay_burst, skip_ids=inflight_ids)
             self.wal.compact()
-        return {
-            "outcomes": outcomes,
-            "requests": handles,
-            "resumed_batches": len(outcomes),
-            "replayed": replayed,
-            "cache_hits": cache_hits,
-            "rejected": rejected,
-        }
+        summary["outcomes"] = outcomes
+        summary["resumed_batches"] = len(outcomes)
+        return summary
+
+    def replay_foreign(self, wal_root: str, *,
+                       replay_rate: Optional[float] = None,
+                       replay_burst: int = 8,
+                       ) -> Dict[str, Any]:
+        """Failover takeover: adopt a dead peer's admission log.
+
+        Opens the WAL at ``wal_root`` — taking its cross-process writer
+        lock, so this raises :class:`~repro.service.wal.WalLocked` while
+        the owning process is still alive (takeover is only possible
+        once the victim is actually dead) — and replays every unconsumed
+        admit through THIS service's front door.  Each entry becomes
+        durable under a fresh entry in *our* WAL before the old one is
+        marked consumed in the victim's log, so the fleet-level
+        "admitted means durable" guarantee holds across the handover:
+        a crash mid-takeover leaves the remaining entries live for the
+        next survivor.  The victim's log is compacted and closed (lock
+        released) before returning.
+
+        Returns the replay summary plus ``pending_after`` — entries
+        still live in the victim's log (transiently rejected replays a
+        later takeover must re-offer).
+        """
+        foreign = RequestLog(wal_root)
+        try:
+            records = foreign.replay()
+            summary = self._replay_records(
+                records, foreign, replay_rate=replay_rate,
+                replay_burst=replay_burst)
+            foreign.compact()
+            summary["pending_after"] = foreign.pending()
+        finally:
+            foreign.close()
+        summary["wal_root"] = wal_root
+        self._telemetry_event("wal_takeover", {
+            "wal_root": wal_root, "replayed": summary["replayed"],
+            "cache_hits": summary["cache_hits"],
+            "rejected": summary["rejected"],
+            "pending_after": summary["pending_after"]})
+        return summary
 
     def metrics_snapshot(self) -> Dict[str, Any]:
         snap = self.metrics.snapshot()

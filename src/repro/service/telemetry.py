@@ -480,17 +480,29 @@ class TelemetryServer:
 
     ``port=0`` binds an ephemeral port (exposed as ``.port`` after
     :meth:`start`) — used by the CI gate and tests.
+
+    The fleet router reuses this server with two overrides:
+    ``render_fn(snapshot)`` replaces :func:`render_prometheus` for
+    ``/metrics`` (fleet-level series with per-worker labels), and
+    ``trace_fn(trace_id)`` serves ``/trace`` when there is no local
+    tracer (spans fanned out from the workers and merged).
     """
 
     def __init__(self, snapshot_fn: Callable[[], Dict[str, Any]],
                  tracer: Optional[trace_mod.RequestTracer] = None,
                  host: str = "127.0.0.1", port: int = 0,
-                 prefix: str = "repro") -> None:
+                 prefix: str = "repro",
+                 render_fn: Optional[Callable[[Dict[str, Any]], str]] = None,
+                 trace_fn: Optional[
+                     Callable[[Optional[str]], List[Dict[str, Any]]]] = None,
+                 ) -> None:
         self.snapshot_fn = snapshot_fn
         self.tracer = tracer
         self.host = host
         self.port = port
         self.prefix = prefix
+        self.render_fn = render_fn
+        self.trace_fn = trace_fn
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
 
@@ -515,8 +527,10 @@ class TelemetryServer:
                 try:
                     if url.path == "/metrics":
                         snap = outer.snapshot_fn()
+                        render = outer.render_fn or (
+                            lambda s: render_prometheus(s, outer.prefix))
                         self._send(
-                            200, render_prometheus(snap, outer.prefix),
+                            200, render(snap),
                             "text/plain; version=0.0.4; charset=utf-8")
                     elif url.path == "/snapshot":
                         self._send(200,
@@ -524,11 +538,15 @@ class TelemetryServer:
                                               default=str, sort_keys=True),
                                    "application/json")
                     elif url.path == "/trace":
-                        if outer.tracer is None:
+                        tid = (parse_qs(url.query).get("id") or [None])[0]
+                        if outer.tracer is not None:
+                            spans = outer.tracer.export(tid)
+                        elif outer.trace_fn is not None:
+                            spans = outer.trace_fn(tid)
+                        else:
                             self._send(404, "no tracer attached\n")
                             return
-                        tid = (parse_qs(url.query).get("id") or [None])[0]
-                        doc = trace_mod.chrome_trace(outer.tracer.export(tid))
+                        doc = trace_mod.chrome_trace(spans)
                         self._send(200, json.dumps(doc), "application/json")
                     elif url.path == "/healthz":
                         self._send(200, "ok\n")

@@ -79,13 +79,20 @@ class WalLocked(RuntimeError):
     The lock is per-process (POSIX semantics): sequential services inside
     one process hand over freely — same as the ``jobs.db`` assumption —
     while a second *process* gets this error instead of silent corruption.
+
+    ``retry_after`` makes the error *retryable* for a fleet router: a
+    takeover racing the victim's death (or two survivors racing each
+    other) should back off and retry rather than fail — the lock clears
+    the instant the owning process exits.
     """
 
     def __init__(self, message: str, *, root: str,
-                 holder_pid: Optional[int] = None) -> None:
+                 holder_pid: Optional[int] = None,
+                 retry_after: float = 0.5) -> None:
         super().__init__(message)
         self.root = root
         self.holder_pid = holder_pid
+        self.retry_after = retry_after
 
 # record framing: magic u32 | type u8 | header_len u32 | data_len u64 |
 # crc32(header+data) u32
