@@ -138,6 +138,85 @@ def analyze(row: Dict) -> Optional[Dict]:
     )
 
 
+def kmeans_step_model(n: int, k: int, d: int, fused: bool) -> Dict:
+    """Modeled HBM bytes / FLOPs for ONE masked Lloyd step (f32).
+
+    unfused (core/kmeans.masked_kmeans_step): the assignment kernel and the
+    one-hot centroid-update einsum are separate programs — ``x`` streams
+    from HBM twice, and the ``(n, k)`` score matrix plus the ``(n, k)``
+    one-hot both round-trip through HBM between them.
+
+    fused (kernels/distance/fused.py): one pass — ``x`` streams once, the
+    score/one-hot live in VMEM per tile, and the only HBM outputs are the
+    assignment ``(n,)`` and the ``(k, d)``-sized accumulators.
+
+    FLOPs are identical either way (2nkd cross term + 2nkd update matmul
+    + O(nk) epilogue): fusion is purely a memory-traffic optimisation,
+    which is exactly the axis the roofline says clustering is bound on.
+    """
+    B = 4  # f32
+    flops = 4.0 * n * k * d + 3.0 * n * k
+    if fused:
+        bytes_hbm = B * (n * d          # x, once
+                         + k * d        # centroids in
+                         + n            # assignment out
+                         + k * d + k    # sums + counts out
+                         + 1)           # inertia
+    else:
+        bytes_hbm = B * (2 * n * d      # x read by BOTH programs
+                         + 2 * k * d    # centroids read by both
+                         + 2 * n * k    # (n, k) scores out + argmin read
+                         + 2 * n * k    # (n, k) one-hot out + matmul read
+                         + n            # assignment
+                         + k * d + k)   # sums + counts
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_hbm / HBM_BW
+    return dict(
+        variant="fused" if fused else "unfused",
+        n=n, k=k, d=d, flops=flops, bytes=bytes_hbm,
+        intensity=flops / bytes_hbm,
+        compute_s=compute_s, memory_s=memory_s,
+        dominant="memory" if memory_s >= compute_s else "compute",
+        step_lower_bound_s=max(compute_s, memory_s),
+    )
+
+
+# Representative serving shapes: the pow2 buckets the service's batcher
+# actually emits for tablet-scale mining workloads (PAPER.md Figs. 4-6).
+KMEANS_ROOFLINE_SHAPES = [
+    (8192, 8, 8),
+    (8192, 64, 16),
+    (65536, 16, 8),
+    (65536, 64, 128),
+]
+
+
+def kmeans_step_rows(shapes=None) -> List[Dict]:
+    rows = []
+    for n, k, d in (shapes or KMEANS_ROOFLINE_SHAPES):
+        for fused in (False, True):
+            rows.append(kmeans_step_model(n, k, d, fused))
+    return rows
+
+
+def render_kmeans_markdown(rows: List[Dict]) -> str:
+    lines = [
+        "",
+        "## Masked K-Means step: unfused vs fused (modeled, per Lloyd step)",
+        "",
+        "| n | k | d | variant | FLOPs | HBM bytes | FLOPs/byte | "
+        "compute (s) | memory (s) | dominant |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['n']} | {r['k']} | {r['d']} | {r['variant']} | "
+            f"{r['flops']:.3g} | {r['bytes']:.3g} | {r['intensity']:.1f} | "
+            f"{r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+            f"**{r['dominant']}** |")
+    return "\n".join(lines)
+
+
 def table(mesh: str = "single_pod_16x16", tag: Optional[str] = None
           ) -> List[Dict]:
     out = []
@@ -180,8 +259,20 @@ def main() -> None:
         print(f"# worst roofline fraction: {worst['arch']} x {worst['shape']}"
               f" ({worst['roofline_fraction']:.2%})")
         print(f"# most collective-bound: {coll['arch']} x {coll['shape']}")
-    md = render_markdown(rows)
+    krows = kmeans_step_rows()
+    for r in krows:
+        print(f"kmeans_step_{r['variant']}_n{r['n']}_k{r['k']}_d{r['d']},"
+              f"{r['step_lower_bound_s'] * 1e6:.3f},"
+              f"dom={r['dominant']};intensity={r['intensity']:.1f};"
+              f"bytes={r['bytes']:.3g}")
+    for n, k, d in KMEANS_ROOFLINE_SHAPES:
+        unf = kmeans_step_model(n, k, d, fused=False)
+        fus = kmeans_step_model(n, k, d, fused=True)
+        print(f"# kmeans n={n} k={k} d={d}: fusion cuts HBM bytes "
+              f"{unf['bytes'] / fus['bytes']:.1f}x")
+    md = render_markdown(rows) + "\n" + render_kmeans_markdown(krows)
     out = os.path.join(RESULTS, "..", "roofline.md")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         f.write(md + "\n")
     print(f"# wrote {os.path.relpath(out)}")

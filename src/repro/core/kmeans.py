@@ -131,6 +131,41 @@ def masked_kmeans_step_jit(x, c, mask, cfg: KMeansConfig):
     return masked_kmeans_step(x, c, mask, cfg)
 
 
+def fused_masked_kmeans_step(x, c, mask, cfg: KMeansConfig):
+    """:func:`masked_kmeans_step` via the fused single-pass pallas kernel.
+
+    Distance, argmin, and the masked per-centroid sum/count/inertia
+    accumulation happen in ONE pass over ``x`` (see
+    ``kernels/distance/fused.py``); only the empty-cluster fix-up and the
+    shift reduction remain host-side XLA.  Same (assign, c_new, shift,
+    inertia) contract as the reference step — ``tests/test_fused_kernel.py``
+    pins the agreement.
+    """
+    from repro.kernels.distance.fused import fused_masked_assign_update
+
+    assign, sums, counts, inertia = fused_masked_assign_update(
+        x, c, mask, block_n=cfg.block_n)
+    has_pts = counts > 0
+    safe = jnp.where(has_pts, counts, 1.0)[:, None]
+    # empty cluster: keep the old center (paper does not respawn centers)
+    c_new = jnp.where(has_pts[:, None], sums / safe, c)
+    shift = jnp.sum(jnp.abs(c_new - c))
+    return assign, c_new, shift, inertia
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fused_masked_kmeans_step_jit(x, c, mask, cfg: KMeansConfig):
+    return fused_masked_kmeans_step(x, c, mask, cfg)
+
+
+def masked_step_fn(cfg: KMeansConfig):
+    """The serving hot loop's step: the fused pallas kernel for kernel
+    configs, the XLA reference otherwise (the ``jax-ref`` fallback path)."""
+    if cfg.use_kernel:
+        return fused_masked_kmeans_step_jit
+    return masked_kmeans_step_jit
+
+
 def init_centroids(key: jax.Array, x: jax.Array, cfg: KMeansConfig) -> jax.Array:
     if cfg.init == "sample":
         # paper: "initial cluster centers were selected randomly by each

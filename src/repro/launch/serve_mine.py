@@ -156,6 +156,23 @@ def build_parser() -> argparse.ArgumentParser:
                          "(default: fraction of the discovered chip's HBM)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--no-continuous", action="store_true",
+                    help="disable continuous batching (on by default): "
+                         "batches then run to completion before queued "
+                         "requests dispatch, instead of compatible "
+                         "requests joining in-flight batches at iteration "
+                         "boundaries and finished items retiring early")
+    ap.add_argument("--join-window", type=float, default=None,
+                    help="seconds after a continuous batch starts during "
+                         "which queued compatible requests may join it "
+                         "(default: open for the batch's whole lifetime)")
+    ap.add_argument("--warm-start", default=None,
+                    help="pre-compile executables at startup from a JSON "
+                         "list of shape specs, e.g. "
+                         "'[{\"algo\": \"kmeans\", \"features\": 2, "
+                         "\"n\": 1024, \"k\": 4}]' — first requests then "
+                         "hit the executable cache instead of paying "
+                         "XLA compilation")
     ap.add_argument("--bucket-policy", default="adaptive",
                     help="batch-shape bucket policy: 'pow2', "
                          "'linear[:STEP]', or 'adaptive[:MAX_BUCKETS"
@@ -200,8 +217,12 @@ def run_fleet(args) -> None:
     worker_config = {
         "max_batch": args.max_batch,
         "max_wait_s": args.max_wait_ms / 1000.0,
+        "continuous": not args.no_continuous,
+        "join_window_s": args.join_window,
         "bucket_policy": args.bucket_policy,
     }
+    if args.warm_start is not None:
+        worker_config["warm_start"] = json.loads(args.warm_start)
     if args.device_budget_mb is not None:
         worker_config["device_budget_bytes"] = args.device_budget_mb * 2**20
     manager = WorkerManager(args.workdir, args.fleet,
@@ -248,10 +269,15 @@ def main() -> None:
         return
 
     backend_mod.load()
+    warm_start = (json.loads(args.warm_start)
+                  if args.warm_start is not None else None)
     service = ClusteringService(
         args.workdir,
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1000.0,
+        continuous=not args.no_continuous,
+        join_window_s=args.join_window,
+        warm_start=warm_start,
         bucket_policy=args.bucket_policy,
         device_budget_bytes=(None if args.device_budget_mb is None
                              else args.device_budget_mb * 2**20),

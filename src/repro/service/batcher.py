@@ -67,17 +67,6 @@ class BatchKey:
         return dict(self.params)
 
 
-def bucket_points(n: int, minimum: int = 8) -> int:
-    """Next power-of-two >= n: pad shapes recur, so compiles are reused.
-
-    This is the *default* (and historical) bucket; the batcher itself pads
-    through its :class:`~repro.service.bucketing.BucketPolicy`.  Kept as a
-    module function because it is also the conservative shape estimate used
-    where no policy is in scope (e.g. the device-budget check's default).
-    """
-    return pow2_bucket(n, minimum)
-
-
 _BATCH_IDS = itertools.count(1)
 
 
@@ -108,7 +97,7 @@ class MicroBatch:
         hand (tests) falls back to the pow2 default."""
         if self.n_pad is not None:
             return self.n_pad
-        return bucket_points(max(r.n_points for r in self.requests))
+        return pow2_bucket(max(r.n_points for r in self.requests))
 
     @property
     def priority(self) -> int:
@@ -127,6 +116,8 @@ class MicroBatcher:
         max_wait_s: float = 0.02,
         oversized: Optional[Callable[[MiningRequest], bool]] = None,
         bucket_policy: Optional[BucketPolicy] = None,
+        joinable: Optional[Callable[[BatchKey], bool]] = None,
+        join_defer_s: float = 0.25,
     ) -> None:
         self.queue = queue
         self.max_batch = max_batch
@@ -134,6 +125,15 @@ class MicroBatcher:
         self.oversized = oversized
         self.policy = bucket_policy if bucket_policy is not None \
             else Pow2Policy()
+        # continuous-batching hand-off: when ``joinable(key)`` says an
+        # in-flight batch with this key is accepting joiners, a ripe (but
+        # not full) staged group holds for up to ``join_defer_s`` extra so
+        # the batch's iteration boundary can claim it via take_joinable —
+        # joining a hot batch beats forming a fresh one behind it on the
+        # same lane.  The deferral is bounded: past the grace window the
+        # group forms normally (an always-full batch must not starve it).
+        self.joinable = joinable
+        self.join_defer_s = join_defer_s
         self._lock = threading.Lock()
         self._staged: Dict[BatchKey, List[MiningRequest]] = {}
 
@@ -144,12 +144,51 @@ class MicroBatcher:
         try:
             b = int(self.policy.bucket(n))
         except Exception:
-            return bucket_points(n)
-        return b if b >= n else bucket_points(n)
+            return pow2_bucket(n)
+        return b if b >= n else pow2_bucket(n)
 
     def pending(self) -> int:
         with self._lock:
             return sum(len(v) for v in self._staged.values())
+
+    def take_joinable(
+        self,
+        key: BatchKey,
+        n_pad: int,
+        limit: int,
+        now: Optional[float] = None,
+    ) -> List[MiningRequest]:
+        """Claim up to ``limit`` staged requests that can JOIN an in-flight
+        batch: same :class:`BatchKey` (same compiled program) and point
+        count within the batch's padded bucket (a join is a host-side data
+        swap into a freed slot — it must never change the compiled shape).
+
+        Called by the continuous-batching boundary hook from the executor
+        thread, racing ``poll()`` on the dispatch thread: claims go through
+        ``claim_for_batch`` like everywhere else, so a request is handed to
+        exactly one of them.
+        """
+        if limit <= 0:
+            return []
+        now = time.time() if now is None else now
+        taken: List[MiningRequest] = []
+        with self._lock:
+            group = self._staged.get(key)
+            if not group:
+                return []
+            keep: List[MiningRequest] = []
+            for r in group:
+                if (len(taken) < limit and not r.done()
+                        and not r.expired(now) and r.n_points <= n_pad
+                        and r.claim_for_batch(now)):
+                    taken.append(r)
+                else:
+                    keep.append(r)
+            if keep:
+                self._staged[key] = keep
+            else:
+                del self._staged[key]
+        return taken
 
     def _form(self, key: BatchKey, now: float) -> Optional[MicroBatch]:
         group = self._staged[key]
@@ -270,17 +309,31 @@ class MicroBatcher:
             self._stage(drained)
             dead = self._prune(now)
             for key in self._keys_by_priority():
-                while key in self._staged and (
-                    len(self._staged[key]) >= self.max_batch
-                    or now - min(r.submitted for r in self._staged[key])
-                    >= self.max_wait_s
-                ):
+                while key in self._staged:
+                    group = self._staged[key]
+                    if len(group) < self.max_batch:
+                        waited = now - min(r.submitted for r in group)
+                        if waited < self.max_wait_s:
+                            break
+                        if (waited < self.max_wait_s + self.join_defer_s
+                                and self._join_deferred(key)):
+                            break
                     batch = self._form(key, now)
                     if batch is not None:
                         batches.append(batch)
         self._fail_expired(dead)
         self._observe(shapes)
         return batches
+
+    def _join_deferred(self, key: BatchKey) -> bool:
+        """Should a ripe group hold for an in-flight batch's boundary?
+        A failing hint must never stall dispatch — default to forming."""
+        if self.joinable is None:
+            return False
+        try:
+            return bool(self.joinable(key))
+        except Exception:
+            return False
 
     def flush_all(self, now: Optional[float] = None) -> List[MicroBatch]:
         """Emit everything staged regardless of deadline (shutdown drain)."""

@@ -210,8 +210,20 @@ class Paradigm:
         on_item_done: ItemDone,
         on_item_state: ItemState,
         state_interval: int = 8,
+        boundary_hook: Optional[Callable[[], List[ItemView]]] = None,
     ) -> RunOutcome:
+        """Run the batch's items.  ``boundary_hook``, when given, is polled
+        at iteration boundaries (continuous batching): it returns freshly
+        joined :class:`ItemView`\\ s — already padded and slotted by the
+        batch executor — which the paradigm must fold into the in-flight
+        run.  Paradigms without iteration boundaries ignore it."""
         raise NotImplementedError
+
+
+# how many Lloyd iterations between boundary-hook polls inside a quantum:
+# joins are claimed on this cadence, checkpoints on the (coarser)
+# state_interval one
+_JOIN_POLL_ITERS = 8
 
 
 class JaxParadigm(Paradigm):
@@ -221,9 +233,16 @@ class JaxParadigm(Paradigm):
 
     resumable_mid_item = True
 
-    def __init__(self, name: str, use_kernel: bool) -> None:
+    def __init__(self, name: str, use_kernel: bool,
+                 exec_cache=None) -> None:
+        from repro.service.exec_cache import default_exec_cache
+
         self.name = name
         self.use_kernel = use_kernel
+        # persistent executable cache: compiled step programs keyed by
+        # (algo, kind, bucket shape, dim, params) — shared process-wide so
+        # every lane and every batch with the same shape reuses one program
+        self.exec_cache = exec_cache or default_exec_cache()
 
     def _config(self, algo: str, params: Dict[str, Any]) -> Any:
         if algo == "dbscan":
@@ -260,8 +279,9 @@ class JaxParadigm(Paradigm):
 
     # -- K-Means -------------------------------------------------------------
 
-    def _run_kmeans_item(self, item, cfg, token, on_item_done, on_item_state,
-                         state_interval):
+    def _kmeans_slot(self, item, cfg):
+        """Per-item runtime state for the Lloyd host loop (fresh or
+        resumed from the item's checkpointed mid state)."""
         import jax
         import jax.numpy as jnp
 
@@ -274,59 +294,145 @@ class JaxParadigm(Paradigm):
             c = kmeans.init_centroids(
                 jax.random.PRNGKey(item.seed), x_pad[: item.length], cfg)
             it = 0
-        assign = jnp.zeros((item.x_pad.shape[0],), jnp.int32)
-        inertia = float("inf")
-        stepped = False
-        converged = False
-        while it < cfg.max_iters:
-            if _cancelled(token):
-                return RunOutcome(
-                    suspended=True, item_index=item.index,
-                    mid_state={
-                        "centroids": np.asarray(c, np.float32),
-                        "iteration": np.int32(it),
-                    })
-            assign, c, shift, inertia = kmeans.masked_kmeans_step_jit(
-                x_pad, c, mask, cfg)
-            stepped = True
-            it += 1
-            if it % state_interval == 0:
-                on_item_state(item.index, {
-                    "centroids": np.asarray(c, np.float32),
-                    "iteration": np.int32(it),
-                })
-            if float(shift) < cfg.tol:
-                converged = True
-                break
-        if not stepped:
+        return {"item": item, "x": x_pad, "mask": mask, "c": c, "it": it,
+                "assign": None, "inertia": float("inf"), "stepped": False}
+
+    @staticmethod
+    def _kmeans_mid(slot) -> Dict[str, np.ndarray]:
+        return {"centroids": np.asarray(slot["c"], np.float32),
+                "iteration": np.int32(slot["it"])}
+
+    def _kmeans_finish(self, slot, step, on_item_done, converged) -> None:
+        if not slot["stepped"]:
             # resumed at the iteration ceiling: the checkpoint carries
             # centroids, not labels — recover the assignment of the
             # incoming centroids (computed before the update) rather than
             # completing with all-zero labels
-            assign, _, _, inertia = kmeans.masked_kmeans_step_jit(
-                x_pad, c, mask, cfg)
-        on_item_done(item.index, np.asarray(assign, np.int16), {
-            "inertia": float(inertia),
-            "iterations": it,
-            "converged": bool(converged),
-            "centroids": np.asarray(c, np.float32),
-        })
+            assign, _, _, inertia = step(slot["x"], slot["c"], slot["mask"])
+            slot["assign"], slot["inertia"] = assign, inertia
+        on_item_done(
+            slot["item"].index, np.asarray(slot["assign"], np.int16), {
+                "inertia": float(slot["inertia"]),
+                "iterations": slot["it"],
+                "converged": bool(converged),
+                "centroids": np.asarray(slot["c"], np.float32),
+            })
+
+    def _run_kmeans_item(self, item, cfg, token, on_item_done, on_item_state,
+                         state_interval):
+        slot = self._kmeans_slot(item, cfg)
+        step = self.exec_cache.kmeans_step(
+            item.x_pad.shape[0], item.x_pad.shape[1], cfg)
+        converged = False
+        while slot["it"] < cfg.max_iters:
+            if _cancelled(token):
+                return RunOutcome(
+                    suspended=True, item_index=item.index,
+                    mid_state=self._kmeans_mid(slot))
+            assign, c, shift, inertia = step(
+                slot["x"], slot["c"], slot["mask"])
+            slot["assign"], slot["c"], slot["inertia"] = assign, c, inertia
+            slot["stepped"] = True
+            slot["it"] += 1
+            if slot["it"] % state_interval == 0:
+                on_item_state(item.index, self._kmeans_mid(slot))
+            if float(shift) < cfg.tol:
+                converged = True
+                break
+        self._kmeans_finish(slot, step, on_item_done, converged)
+        return RunOutcome()
+
+    # -- continuous batching -------------------------------------------------
+
+    def _execute_kmeans_continuous(self, plan, items, token, on_item_done,
+                                   on_item_state, state_interval,
+                                   boundary_hook):
+        """Interleaved Lloyd driver: the continuous-batching hot loop.
+
+        Every in-flight item runs a quantum of ``state_interval``
+        iterations, then yields — converged items retire immediately
+        (``on_item_done`` fires mid-batch, which is what resolves their
+        futures early), and the boundary hook is polled so compatible
+        queued requests join the run in freed slots without waiting for
+        the batch to finish.  All items share one compiled step program
+        (same bucket shape), so joining never recompiles.
+        """
+        from collections import deque
+
+        active = deque(self._kmeans_slot(item, plan.config)
+                       for item in items)
+        while active:
+            if _cancelled(token):
+                # snapshot EVERY mid-flight slot so the suspension
+                # checkpoint covers the whole in-flight set, not just one
+                for slot in active:
+                    on_item_state(slot["item"].index, self._kmeans_mid(slot))
+                return RunOutcome(suspended=True)
+            slot = active.popleft()
+            cfg = plan.config
+            step = self.exec_cache.kmeans_step(
+                slot["x"].shape[0], slot["x"].shape[1], cfg)
+            converged = False
+            quantum = 0
+            while slot["it"] < cfg.max_iters and quantum < state_interval:
+                assign, c, shift, inertia = step(
+                    slot["x"], slot["c"], slot["mask"])
+                slot["assign"], slot["c"] = assign, c
+                slot["inertia"] = inertia
+                slot["stepped"] = True
+                slot["it"] += 1
+                quantum += 1
+                if float(shift) < cfg.tol:
+                    converged = True
+                    break
+                # join sub-cadence: claim staged compatible requests every
+                # few iterations, decoupled from the (much coarser)
+                # checkpoint quantum — a joiner's wait is bounded by
+                # iterations, not by how often state is persisted
+                if (boundary_hook is not None
+                        and quantum % _JOIN_POLL_ITERS == 0):
+                    for joined in boundary_hook():
+                        active.append(self._kmeans_slot(joined, cfg))
+            if converged or slot["it"] >= cfg.max_iters:
+                # early retirement: labels delivered before the batch ends
+                self._kmeans_finish(slot, step, on_item_done, converged)
+            else:
+                on_item_state(slot["item"].index, self._kmeans_mid(slot))
+                active.append(slot)
+            if boundary_hook is not None:
+                for joined in boundary_hook():
+                    active.append(self._kmeans_slot(joined, cfg))
         return RunOutcome()
 
     def execute(self, plan, items, token, on_item_done, on_item_state,
-                state_interval=8):
+                state_interval=8, boundary_hook=None):
         backend_mod.discover_backend()  # lazy-load before first device use
         cfg = plan.config if plan.config is not None else self._config(
             plan.algo, plan.params)
+        if plan.config is None:
+            plan = dataclasses.replace(plan, config=cfg)
+        if plan.algo != "dbscan" and boundary_hook is not None:
+            return self._execute_kmeans_continuous(
+                plan, items, token, on_item_done, on_item_state,
+                state_interval, boundary_hook)
         run_item = (self._run_dbscan_item if plan.algo == "dbscan"
                     else self._run_kmeans_item)
-        for item in items:
+        from collections import deque
+
+        work = deque(items)
+        while work:
             if _cancelled(token):
                 return RunOutcome(suspended=True)
+            item = work.popleft()
             outcome = run_item(item, cfg, token, on_item_done, on_item_state,
                                state_interval)
             if outcome.suspended:
                 return outcome
+            if boundary_hook is not None:
+                # DBSCAN expansion rounds have no shared quantum driver;
+                # joins happen at item boundaries (retire is still early:
+                # on_item_done fired per item above)
+                work.extend(boundary_hook())
         return RunOutcome()
 
 
@@ -402,7 +508,9 @@ class NumpyMTParadigm(Paradigm):
         }
 
     def execute(self, plan, items, token, on_item_done, on_item_state,
-                state_interval=8):
+                state_interval=8, boundary_hook=None):
+        # no iteration-boundary joins: the thread pool runs items to
+        # completion, so a continuous hook is ignored (batcher re-forms)
         cfg = plan.config if plan.config is not None else self._config(
             plan.algo, plan.params)
         work = (self._dbscan_item if plan.algo == "dbscan"
@@ -601,7 +709,9 @@ class DistributedParadigm(Paradigm):
         return RunOutcome()
 
     def execute(self, plan, items, token, on_item_done, on_item_state,
-                state_interval=8):
+                state_interval=8, boundary_hook=None):
+        # oversized requests run one-at-a-time across the mesh; nothing
+        # can share the device, so boundary joins don't apply
         from repro.core import distributed as dist
 
         backend_mod.discover_backend()

@@ -66,6 +66,9 @@ class BatchOutcome:
     lengths: Optional[List[int]] = None             # per item real points
     host_s: float = 0.0     # exec wall time spent in host bookkeeping
     device_s: float = 0.0   # exec_s minus host_s (the compute share)
+    continuous: bool = False  # ran with in-flight join/retire slots
+    joined: int = 0           # requests that joined mid-flight
+    retired: int = 0          # items delivered before the batch ended
 
     @property
     def real_points(self) -> int:
@@ -98,6 +101,7 @@ class BatchExecutor:
         heartbeat_timeout: float = 60.0,
         checkpoint_every: int = 8,
         keep_last: int = 2,
+        cont_save_interval_s: float = 0.5,
     ) -> None:
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
@@ -106,6 +110,12 @@ class BatchExecutor:
         self.registry = registry or default_registry()
         self.checkpoint_every = checkpoint_every
         self.keep_last = keep_last
+        # continuous batches carry capacity-sized state and fire a slot
+        # event per quantum per slot — a full self-contained checkpoint
+        # for each would turn the hot loop into an fsync loop.  Writes
+        # are coalesced to at most one per this interval; forced writes
+        # (first durable step, suspension snapshots) always land.
+        self.cont_save_interval_s = cont_save_interval_s
         # fired the moment a batch's step-0 checkpoint exists — the
         # durability hand-off point where the admission WAL releases its
         # entries to the job record (see repro.service.wal)
@@ -132,6 +142,9 @@ class BatchExecutor:
         progress_hook=None,
         executor: Optional[str] = None,
         energy_hints: Optional[Dict[str, float]] = None,
+        continuous: bool = False,
+        join_source: Optional[Callable[[int], List[Any]]] = None,
+        on_retire: Optional[Callable[[Any, Dict[str, Any]], None]] = None,
     ) -> BatchOutcome:
         """Execute a fresh micro-batch (enqueue -> claim -> run).
 
@@ -140,6 +153,15 @@ class BatchExecutor:
         ``energy_hints`` (EWMA joules per unit work, per paradigm) make
         the persisted plan's modeled_joules reflect observed behaviour
         instead of the static prior.
+
+        ``continuous`` switches the batch to in-flight (continuous)
+        batching: the state tree is sized to the batch *capacity* rather
+        than its occupancy, finished items retire the moment they complete
+        (``on_retire(request, result)`` fires mid-batch), and at every
+        iteration boundary ``join_source(free_slots)`` may hand back
+        compatible queued requests that are swapped into freed padded
+        slots — same compiled program, no recompilation, the device never
+        goes idle between micro-batches.
         """
         key = batch.key
         params = key.params_dict
@@ -182,29 +204,37 @@ class BatchExecutor:
             float(np.max(r.data)) if r.data.size else 0.0
             for r in batch.requests
         )
-        data = np.stack([
-            _pad_item(np.asarray(r.data, np.float32), n_max, key.algo, eps,
-                      data_high)
-            for r in batch.requests
-        ])
+        # continuous batches are laid out at CAPACITY, not occupancy: the
+        # spare padded slots are what later requests join into
+        cont = bool(continuous) and not batch.oversized
+        rows = int(batch.capacity) if cont else size
+
+        def _slots(vals: List[Any], fill: Any) -> List[Any]:
+            return list(vals) + [fill] * (rows - len(vals))
+
         job_params = {
             "algo": key.algo,
             "executor": executor,
             "params": params,
-            "size": size,
+            "size": rows,
             "n_max": n_max,
             "features": d,
             "capacity": batch.capacity,
-            "lengths": [r.n_points for r in batch.requests],
-            "seeds": [int(r.params.get("seed", 0)) for r in batch.requests],
-            "request_ids": [r.request_id for r in batch.requests],
-            "tenants": [r.tenant for r in batch.requests],
+            "continuous": cont,
+            "lengths": _slots([r.n_points for r in batch.requests], 0),
+            "seeds": _slots(
+                [int(r.params.get("seed", 0)) for r in batch.requests], 0),
+            "request_ids": _slots(
+                [r.request_id for r in batch.requests], -1),
+            "tenants": _slots([r.tenant for r in batch.requests], ""),
             # content hashes survive in the job record so a resumed batch
             # can re-populate the result cache after a restart
-            "cache_keys": [r.cache_key or "" for r in batch.requests],
+            "cache_keys": _slots(
+                [r.cache_key or "" for r in batch.requests], ""),
             # trace ids survive too: the process that resumes this batch
             # emits its spans under the SAME traces (crash continuity)
-            "trace_ids": [r.trace_id or "" for r in batch.requests],
+            "trace_ids": _slots(
+                [r.trace_id or "" for r in batch.requests], ""),
             "plan": plan.summary(),
         }
         job_id = self.jobs.enqueue(SERVICE_JOB_KIND, job_params)
@@ -214,7 +244,11 @@ class BatchExecutor:
             r.job_id = job_id
 
         state = self._blank_state(job_params)
-        state["data"] = data
+        state["occupied"][size:] = False
+        for i, r in enumerate(batch.requests):
+            state["data"][i] = _pad_item(
+                np.asarray(r.data, np.float32), n_max, key.algo, eps,
+                data_high)
         ckpt = self._ckpt(job_id)
         # step-0 checkpoint: the batch is durable from this point on
         path = ckpt.save(0, state, metadata={"params": job_params})
@@ -229,7 +263,9 @@ class BatchExecutor:
                     "on_batch_durable hook failed for job %d", job_id)
         return self._execute(job_id, job_params, state, token,
                              progress_hook=progress_hook, resumed=False,
-                             plan=plan)
+                             plan=plan, requests=batch.requests,
+                             join_source=join_source if cont else None,
+                             on_retire=on_retire)
 
     # -- state trees ---------------------------------------------------------
 
@@ -239,6 +275,9 @@ class BatchExecutor:
             "data": np.zeros((size, n_max, d), np.float32),
             "labels": np.zeros((size, n_max), np.int16),
             "done": np.zeros((size,), bool),
+            # all-occupied default: only continuous batches carry spare
+            # (joinable) slots, and run_batch masks those off explicitly
+            "occupied": np.ones((size,), bool),
             "active": np.asarray(False),
             "item": np.int32(0),
             "inertia": np.zeros((size,), np.float32),
@@ -257,6 +296,12 @@ class BatchExecutor:
             k = int(jp["params"]["k"])
             state["mid.centroids"] = np.zeros((k, d), np.float32)
             state["mid.iteration"] = np.int32(0)
+            if jp.get("continuous"):
+                # continuous K-Means interleaves EVERY slot's Lloyd loop,
+                # so mid-flight state is per-slot, not single-cursor
+                state["slot.centroids"] = np.zeros((size, k, d), np.float32)
+                state["slot.iteration"] = np.zeros((size,), np.int32)
+                state["slot.started"] = np.zeros((size,), bool)
         return state
 
     @staticmethod
@@ -276,8 +321,20 @@ class BatchExecutor:
         progress_hook=None,
         resumed: bool,
         plan: Optional[ExecutionPlan] = None,
+        requests: Optional[List[Any]] = None,
+        join_source: Optional[Callable[[int], List[Any]]] = None,
+        on_retire: Optional[Callable[[Any, Dict[str, Any]], None]] = None,
     ) -> BatchOutcome:
         paradigm = self.registry.get(jp["executor"])
+        cont = bool(jp.get("continuous"))
+        # per-slot mid state (vs the single mid.* cursor): continuous
+        # K-Means has every slot mid-flight at once
+        cont_slots = cont and jp["algo"] != "dbscan"
+        # slot -> live request, for early retirement; popped on delivery so
+        # a reused slot can never re-resolve its predecessor
+        live: Dict[int, Any] = dict(enumerate(requests or []))
+        joined = [0]
+        retired = [0]
         if plan is None:
             # resume path: re-plan on THIS host — sharded checkpoints carry
             # gathered, device-count-independent state, so a batch suspended
@@ -293,13 +350,27 @@ class BatchExecutor:
         traces: List[str] = [str(t) for t in (jp.get("trace_ids") or [])]
         host = [0.0]   # checkpoint + progress time inside the exec window
 
+        last_write = [0.0, ""]   # monotonic time of last write, its path
+
         def save(item: Optional[int] = None) -> str:
+            # continuous write coalescing: the in-memory state is always
+            # current, so skipping a write costs only resume granularity
+            # (the WAL keeps every unresolved request replayable).  A
+            # cancelled token means suspension snapshots are in flight —
+            # those must land before the process exits, so they always
+            # write; so does the first step (the durability hand-off).
+            if (cont and last_write[1]
+                    and (token is None or not token.cancelled())
+                    and time.monotonic() - last_write[0]
+                    < self.cont_save_interval_s):
+                return last_write[1]
             # every checkpoint is self-contained (data rides along), so GC
             # of old steps can never strand a resume
             save_step[0] += 1
             t_wall = time.time()
             m0 = time.monotonic()
             path = ckpt.save(save_step[0], state, metadata={"params": jp})
+            last_write[0], last_write[1] = time.monotonic(), path
             self.jobs.report_progress(job_id, step=save_step[0],
                                       checkpoint_path=path)
             dur = time.monotonic() - m0
@@ -313,10 +384,16 @@ class BatchExecutor:
 
         def on_item_state(i: int, tree: Dict[str, np.ndarray]) -> None:
             with lock:
-                state["active"] = np.asarray(True)
-                state["item"] = np.int32(i)
-                for k, v in tree.items():
-                    state[f"mid.{k}"] = np.asarray(v)
+                if cont_slots:
+                    state["slot.centroids"][i] = np.asarray(
+                        tree["centroids"], np.float32)
+                    state["slot.iteration"][i] = np.int32(tree["iteration"])
+                    state["slot.started"][i] = True
+                else:
+                    state["active"] = np.asarray(True)
+                    state["item"] = np.int32(i)
+                    for k, v in tree.items():
+                        state[f"mid.{k}"] = np.asarray(v)
                 save(i)
             events[0] += 1
             if progress_hook is not None:
@@ -329,24 +406,50 @@ class BatchExecutor:
                 state["done"][i] = True
                 state["active"] = np.asarray(False)
                 state["item"] = np.int32(i + 1)
+                if cont_slots:
+                    state["slot.started"][i] = False
                 for name in ("inertia", "iterations", "converged",
                              "n_clusters", "noise", "expansions"):
                     if name in scalars:
                         state[name][i] = scalars[name]
                 save(i)
+                result = (self._item_result(jp, state, i)
+                          if on_retire is not None else None)
             events[0] += 1
             if progress_hook is not None:
                 progress_hook(job_id, i, events[0])
+            if on_retire is not None:
+                # early retirement: the item's future resolves NOW, not
+                # when the whole batch drains (outside the state lock —
+                # completion callbacks are arbitrary user code)
+                req = live.pop(i, None)
+                if req is not None:
+                    retired[0] += 1
+                    try:
+                        on_retire(req, result)
+                    except Exception:
+                        logger.exception(
+                            "on_retire failed for request %s (job %d)",
+                            getattr(req, "request_id", "?"), job_id)
+                    if (tr is not None and 0 <= i < len(traces)
+                            and traces[i]):
+                        tr.mark(traces[i], "retire", job_id=job_id, slot=i)
 
         # remaining items, current (possibly mid-flight) one first
         items: List[ItemView] = []
         active = bool(state["active"])
         current = int(state["item"])
         for i in range(jp["size"]):
-            if bool(state["done"][i]):
+            if not bool(state["occupied"][i]) or bool(state["done"][i]):
                 continue
             mid = None
-            if active and i == current and paradigm.resumable_mid_item:
+            if cont_slots:
+                if bool(state["slot.started"][i]):
+                    mid = {
+                        "centroids": np.array(state["slot.centroids"][i]),
+                        "iteration": np.int32(state["slot.iteration"][i]),
+                    }
+            elif active and i == current and paradigm.resumable_mid_item:
                 mid = self._mid_tree(state)
             items.append(ItemView(
                 index=i,
@@ -355,6 +458,61 @@ class BatchExecutor:
                 seed=int(jp["seeds"][i]),
                 mid_state=mid,
             ))
+
+        boundary: Optional[Callable[[], List[ItemView]]] = None
+        if cont and join_source is not None:
+            eps = float(jp["params"].get("eps", 1.0))
+
+            def boundary() -> List[ItemView]:
+                with lock:
+                    free = [i for i in range(jp["size"])
+                            if not bool(state["occupied"][i])
+                            or bool(state["done"][i])]
+                if not free:
+                    return []
+                views: List[ItemView] = []
+                for req in join_source(len(free)):
+                    slot = free.pop(0)
+                    x = np.asarray(req.data, np.float32)
+                    high = float(np.max(x)) if x.size else 0.0
+                    padded = _pad_item(x, int(jp["n_max"]), jp["algo"], eps,
+                                       high)
+                    with lock:
+                        # host-side slot swap — the compiled program never
+                        # sees a new shape, only new bytes in an old slot
+                        state["data"][slot] = padded
+                        state["labels"][slot] = 0
+                        state["done"][slot] = False
+                        state["occupied"][slot] = True
+                        if cont_slots:
+                            state["slot.started"][slot] = False
+                        for name in ("inertia", "iterations", "converged",
+                                     "n_clusters", "noise", "expansions"):
+                            state[name][slot] = 0
+                        jp["lengths"][slot] = int(req.n_points)
+                        jp["seeds"][slot] = int(req.params.get("seed", 0))
+                        jp["request_ids"][slot] = req.request_id
+                        jp["tenants"][slot] = req.tenant
+                        jp["cache_keys"][slot] = req.cache_key or ""
+                        jp["trace_ids"][slot] = req.trace_id or ""
+                        traces[slot] = req.trace_id or ""
+                        live[slot] = req
+                        joined[0] += 1
+                    # no join-time checkpoint: the joiner's WAL entry stays
+                    # live until it retires, so a crash in the window
+                    # replays it (at-least-once, like any admitted request);
+                    # the next periodic save persists it with the job
+                    req.job_id = job_id
+                    if tr is not None and req.trace_id:
+                        tr.mark(req.trace_id, "join", job_id=job_id,
+                                slot=slot)
+                    views.append(ItemView(
+                        index=slot, x_pad=padded,
+                        length=int(req.n_points),
+                        seed=int(req.params.get("seed", 0)),
+                        mid_state=None,
+                    ))
+                return views
 
         # one execute-attempt span per trace, journaled at begin
         # (announce): if this process is SIGKILL'd mid-batch, the on-disk
@@ -380,6 +538,7 @@ class BatchExecutor:
                 outcome = paradigm.execute(
                     plan, items, token, on_item_done, on_item_state,
                     state_interval=self.checkpoint_every,
+                    boundary_hook=boundary,
                 )
             except BaseException as e:
                 error = e
@@ -400,15 +559,21 @@ class BatchExecutor:
         for h in exec_spans:
             h.finish(suspended=bool(outcome.suspended))
 
+        # a continuous outcome reports only the OCCUPIED slots (free ones
+        # are padding, not requests); legacy batches are fully occupied
+        idxs = [i for i in range(jp["size"]) if bool(state["occupied"][i])]
+        cache_keys = list(jp.get("cache_keys") or [""] * jp["size"])
         common = dict(
             job_id=job_id, algo=jp["algo"], executor=jp["executor"],
-            resumed=resumed, exec_s=exec_s, size=jp["size"],
+            resumed=resumed, exec_s=exec_s, size=len(idxs),
             capacity=jp["capacity"], n_max=jp["n_max"],
-            request_ids=list(jp["request_ids"]), tenants=list(jp["tenants"]),
-            cache_keys=list(jp.get("cache_keys") or []),
+            request_ids=[jp["request_ids"][i] for i in idxs],
+            tenants=[jp["tenants"][i] for i in idxs],
+            cache_keys=[cache_keys[i] for i in idxs],
             plan=plan.summary(),
-            lengths=[int(x) for x in jp["lengths"]],
+            lengths=[int(jp["lengths"][i]) for i in idxs],
             host_s=host_s, device_s=device_s,
+            continuous=cont, joined=joined[0], retired=retired[0],
         )
         if outcome.suspended:
             with lock:
@@ -431,29 +596,28 @@ class BatchExecutor:
             save()
         self.jobs.transition(job_id, JobState.SUCCEEDED)
         return BatchOutcome(
-            suspended=False, results=self._results(jp, state), **common)
+            suspended=False,
+            results=[self._item_result(jp, state, i) for i in idxs],
+            **common)
 
     @staticmethod
-    def _results(jp: Dict[str, Any],
-                 state: Dict[str, np.ndarray]) -> List[Dict[str, Any]]:
-        out = []
-        for i in range(jp["size"]):
-            n = int(jp["lengths"][i])
-            r: Dict[str, Any] = {
-                "algo": jp["algo"],
-                "executor": jp["executor"],
-                "labels": np.asarray(state["labels"][i][:n]),
-            }
-            if jp["algo"] == "dbscan":
-                r["n_clusters"] = int(state["n_clusters"][i])
-                r["noise"] = int(state["noise"][i])
-                r["expansions"] = int(state["expansions"][i])
-            else:
-                r["inertia"] = float(state["inertia"][i])
-                r["iterations"] = int(state["iterations"][i])
-                r["converged"] = bool(state["converged"][i])
-            out.append(r)
-        return out
+    def _item_result(jp: Dict[str, Any], state: Dict[str, np.ndarray],
+                     i: int) -> Dict[str, Any]:
+        n = int(jp["lengths"][i])
+        r: Dict[str, Any] = {
+            "algo": jp["algo"],
+            "executor": jp["executor"],
+            "labels": np.array(state["labels"][i][:n]),
+        }
+        if jp["algo"] == "dbscan":
+            r["n_clusters"] = int(state["n_clusters"][i])
+            r["noise"] = int(state["noise"][i])
+            r["expansions"] = int(state["expansions"][i])
+        else:
+            r["inertia"] = float(state["inertia"][i])
+            r["iterations"] = int(state["iterations"][i])
+            r["converged"] = bool(state["converged"][i])
+        return r
 
     # -- restart / resume ----------------------------------------------------
 
@@ -487,6 +651,18 @@ class BatchExecutor:
                     job.job_id, error="no checkpoint to resume from")
                 self.jobs.transition(job.job_id, JobState.FAILED)
                 continue
+            # prefer the checkpoint manifest's params: a continuous batch
+            # admits joiners AFTER enqueue, and only the periodic saves
+            # (state + metadata written atomically) carry the updated slot
+            # roster — the job row still holds the formation-time view
+            try:
+                meta = ckpt.manifest(step).get("metadata") or {}
+                jp = meta.get("params") or jp
+            except Exception:
+                logger.exception(
+                    "unreadable manifest metadata for job %d step %d; "
+                    "resuming from the job record's params", job.job_id,
+                    step)
             template = self._blank_state(jp)
             restored = ckpt.restore(step, template)
             # np.array (not asarray): device buffers restore as read-only

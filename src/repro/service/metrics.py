@@ -136,6 +136,15 @@ class ServiceMetrics:
         self._outcomes: Deque[bool] = deque(maxlen=window)
         self._stages: Dict[Tuple[str, str], Deque[float]] = {}
         self._stage_counts: Dict[Tuple[str, str], int] = {}
+        # -- continuous batching (lifetime) ---------------------------------
+        # joins: queued requests swapped into an in-flight batch's freed
+        # slots; early_retires: items whose futures resolved before their
+        # batch drained; slot_occupancy window: filled-slot fraction of
+        # each continuous batch over its whole run
+        self.total_joins = 0
+        self.total_early_retires = 0
+        self.continuous_batches = 0
+        self._slot_occupancy: Deque[float] = deque(maxlen=max(1, window // 4))
 
     def record_request(
         self,
@@ -239,6 +248,16 @@ class ServiceMetrics:
         with self._lock:
             self.suspended_batches += 1
 
+    def record_continuous(self, *, joins: int, early_retires: int,
+                          slot_occupancy: float) -> None:
+        """One continuous batch's join/retire tallies and its mean
+        filled-slot fraction (items served / capacity x rounds proxy)."""
+        with self._lock:
+            self.continuous_batches += 1
+            self.total_joins += int(joins)
+            self.total_early_retires += int(early_retires)
+            self._slot_occupancy.append(float(slot_occupancy))
+
     def window_stats(self) -> Dict[str, Any]:
         """Windowed observations the SLO evaluator consumes."""
         with self._lock:
@@ -274,6 +293,14 @@ class ServiceMetrics:
             outcomes = list(self._outcomes)
             stage_windows = {k: list(v) for k, v in self._stages.items()}
             stage_counts = dict(self._stage_counts)
+            continuous = {
+                "batches": self.continuous_batches,
+                "joins": self.total_joins,
+                "early_retires": self.total_early_retires,
+                "mean_slot_occupancy": (
+                    sum(self._slot_occupancy) / len(self._slot_occupancy)
+                    if self._slot_occupancy else 0.0),
+            }
 
         latencies = [r.latency_s for r in requests]
         waits = [r.queue_wait_s for r in requests]
@@ -353,6 +380,7 @@ class ServiceMetrics:
         return {
             "totals": totals,           # lifetime; the rest is window-local
             "bucketing": bucketing,
+            "continuous": continuous,
             "stages": stages,
             "errors": errors,
             "requests": len(requests),

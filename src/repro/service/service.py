@@ -40,10 +40,14 @@ from repro.service.bucketing import BucketPolicy, make_policy
 from repro.service.cache import ResultCache, content_key
 from repro.service.dispatch import (
     EXECUTOR_DISTRIBUTED,
+    EXECUTOR_JAX_REF,
+    EXECUTOR_PALLAS,
     ParadigmRegistry,
+    _kmeans_config,
     default_registry,
     estimate_work,
 )
+from repro.service.exec_cache import default_exec_cache
 from repro.service.executor import BatchExecutor, BatchOutcome
 from repro.service.metrics import ServiceMetrics
 from repro.service.queue import (
@@ -149,6 +153,9 @@ class ClusteringService:
         *,
         max_batch: int = 8,
         max_wait_s: float = 0.02,
+        continuous: bool = True,
+        join_window_s: Optional[float] = None,
+        warm_start: Optional[List[Dict[str, Any]]] = None,
         bucket_policy: "str | BucketPolicy | None" = "adaptive",
         max_backlog: int = 256,
         max_per_tenant: int = 64,
@@ -204,13 +211,33 @@ class ClusteringService:
         self.batcher = MicroBatcher(
             self.queue, max_batch=max_batch, max_wait_s=max_wait_s,
             oversized=self._req_oversized if can_shard else None,
-            bucket_policy=self.bucket_policy)
+            bucket_policy=self.bucket_policy,
+            joinable=self._join_open)
+        # BatchKey -> count of in-flight continuous batches accepting
+        # joiners: the batcher defers forming ripe groups for these keys
+        # (bounded by its join_defer_s) so boundaries claim them instead
+        self._joinable: Dict[BatchKey, int] = {}
         self.executor = BatchExecutor(
             workdir,
             registry=registry,
             heartbeat_timeout=heartbeat_timeout,
             checkpoint_every=checkpoint_every,
         )
+        # continuous (in-flight) batching: jitted-paradigm batches expose
+        # iteration boundaries where finished items retire early and
+        # compatible queued requests join the run by filling freed padded
+        # slots — the device stays hot between micro-batches instead of
+        # paying formation + step-0 overhead per convoy straggler.
+        # ``join_window_s`` bounds how long after formation a batch keeps
+        # admitting joiners (None = for as long as it runs); ``warm_start``
+        # is a list of {algo, k, features, n, [executor]} specs whose step
+        # executables are AOT-compiled at start() so the first request of
+        # each expected shape never pays the compile.
+        self.continuous = bool(continuous)
+        self.join_window_s = join_window_s
+        self.warm_start = list(warm_start or [])
+        self.exec_cache = default_exec_cache()
+        self._started_at: Optional[float] = None
         # cache_spill=False keeps the in-memory cache but skips the
         # per-put npz+fsync (for throughput-sensitive deployments that
         # don't need warm restarts)
@@ -258,6 +285,12 @@ class ClusteringService:
         self._stopped = False
         self._draining = False
         self._dispatcher: Optional[threading.Thread] = None
+
+    def _join_open(self, key: BatchKey) -> bool:
+        """Batcher hint: is an in-flight continuous batch with this key
+        still accepting joiners?"""
+        with self._lock:
+            return self._joinable.get(key, 0) > 0
 
     def _req_oversized(self, req: MiningRequest) -> bool:
         """Does one request's working set exceed the per-device budget?
@@ -332,6 +365,8 @@ class ClusteringService:
         self._running = True
         self._stopped = False
         self._draining = False
+        self._started_at = time.monotonic()
+        self._warm_exec_cache()
         self.lanes = {name: ExecutorLane(name)
                       for name in self.registry.names()}
         for lane in self.lanes.values():
@@ -344,6 +379,35 @@ class ClusteringService:
             name="clustering-dispatch")
         self._dispatcher.start()
         return self
+
+    def _warm_exec_cache(self) -> None:
+        """AOT-compile the step executables the warm-start specs predict.
+
+        Each spec pins a params class and a representative point count;
+        the service's own bucket policy rounds the count to the padded
+        shape live traffic would get, so the warmed key matches the key
+        the executor will ask for.  A bad spec is logged and skipped —
+        warming is an optimisation, never a startup gate.
+        """
+        for spec in self.warm_start:
+            try:
+                if str(spec.get("algo", "kmeans")) != "kmeans":
+                    continue   # only the K-Means step compiles AOT today
+                d = int(spec["features"])
+                n = int(spec.get("n", 1024))
+                n_pad = max(int(self.bucket_policy.bucket(n)), n)
+                params = {k: v for k, v in spec.items()
+                          if k not in ("algo", "features", "n", "executor")}
+                names = self.registry.names()
+                execs = ([str(spec["executor"])] if spec.get("executor")
+                         else [x for x in (EXECUTOR_PALLAS, EXECUTOR_JAX_REF)
+                               if x in names])
+                for ex in execs:
+                    cfg = _kmeans_config(
+                        params, use_kernel=(ex == EXECUTOR_PALLAS))
+                    self.exec_cache.warm_kmeans(n_pad, d, cfg)
+            except Exception:
+                logger.exception("warm-start spec %r failed", spec)
 
     def __enter__(self) -> "ClusteringService":
         return self.start()
@@ -705,23 +769,84 @@ class ClusteringService:
                 self.tracer.emit(req.trace_id, "lane_wait", req.batched,
                                  max(0.0, now - req.batched),
                                  executor=executor)
+        # continuous batching rides the jitted paradigms only: their host
+        # loops expose iteration boundaries; numpy-mt runs items to
+        # completion on a pool and distributed batches are singletons
+        use_cont = (self.continuous and not batch.oversized
+                    and executor in (EXECUTOR_PALLAS, EXECUTOR_JAX_REF))
+        joined_reqs: List[MiningRequest] = []
+        join_source = on_retire = None
+        unregister = lambda: None  # noqa: E731 - rebound when use_cont
+        if use_cont:
+            formed = time.monotonic()
+            with self._lock:
+                self._joinable[batch.key] = \
+                    self._joinable.get(batch.key, 0) + 1
+            registered = [True]
+
+            def unregister() -> None:
+                if not registered[0]:
+                    return
+                registered[0] = False
+                with self._lock:
+                    left = self._joinable.get(batch.key, 0) - 1
+                    if left > 0:
+                        self._joinable[batch.key] = left
+                    else:
+                        self._joinable.pop(batch.key, None)
+
+            def join_source(limit: int) -> List[MiningRequest]:
+                if (not self._running or self._draining
+                        or self.token.cancelled()):
+                    unregister()
+                    return []
+                if (self.join_window_s is not None
+                        and time.monotonic() - formed > self.join_window_s):
+                    unregister()   # window closed: stop deferring staging
+                    return []
+                got = self.batcher.take_joinable(
+                    batch.key, batch.n_max, limit)
+                joined_reqs.extend(got)
+                return got
+
+            def on_retire(req: MiningRequest, result: Dict[str, Any]) -> None:
+                # the early-retirement delivery path: fires mid-batch from
+                # the executor the moment an item's labels exist
+                t_d, m_d = time.time(), time.monotonic()
+                if req.cache_key:
+                    self.cache.put(req.cache_key, result)
+                req.resolve(result)
+                if req.trace_id:
+                    self.tracer.emit(req.trace_id, "deliver", t_d,
+                                     time.monotonic() - m_d,
+                                     executor=executor)
+                self.metrics.record_request(
+                    tenant=req.tenant, algo=req.algo, executor=executor,
+                    latency_s=req.latency or 0.0,
+                    queue_wait_s=req.queue_wait or 0.0)
+
         try:
             outcome = self.executor.run_batch(
                 batch, token=self.token, executor=executor,
-                energy_hints=self.metrics.energy_hints())
+                energy_hints=self.metrics.energy_hints(),
+                continuous=use_cont, join_source=join_source,
+                on_retire=on_retire)
         except BaseException as e:
             # each request gets its own exception object: concurrent
             # wait() callers re-raise, and a raise mutates the instance's
             # __traceback__ — sharing one across threads races
-            for req in batch.requests:
-                req.fail(_per_request_error(e))
+            for req in batch.requests + joined_reqs:
+                if not req.done():
+                    req.fail(_per_request_error(e))
             return
+        finally:
+            unregister()
         try:
-            self._absorb(batch.requests, outcome)
+            self._absorb(batch.requests + joined_reqs, outcome)
         except BaseException as e:
             # absorption (metrics, cache, resolve) must never kill the
             # lane worker: fail whatever did not resolve and keep serving
-            for req in batch.requests:
+            for req in batch.requests + joined_reqs:
                 if not req.done():
                     req.fail(_per_request_error(e))
 
@@ -752,13 +877,32 @@ class ClusteringService:
             "exec_s": outcome.exec_s, "host_s": outcome.host_s,
             "device_s": outcome.device_s, "suspended": outcome.suspended,
             "resumed": outcome.resumed})
+        if outcome.continuous:
+            self.metrics.record_continuous(
+                joins=outcome.joined, early_retires=outcome.retired,
+                slot_occupancy=outcome.size / max(1, outcome.capacity))
         if outcome.suspended:
             self.metrics.record_suspended()
             for req in requests:
-                req.fail(JobSuspended(outcome.job_id))
+                if not req.done():
+                    req.fail(JobSuspended(outcome.job_id))
             return
         assert outcome.results is not None
-        for req, result in zip(requests, outcome.results):
+        if outcome.continuous:
+            # everything already retired (resolved) mid-batch; this is the
+            # backstop for anything the retire path missed
+            by_id = {rid: res for rid, res in
+                     zip(outcome.request_ids, outcome.results)}
+            pending = [(req, by_id.get(req.request_id))
+                       for req in requests if not req.done()]
+        else:
+            pending = list(zip(requests, outcome.results))
+        for req, result in pending:
+            if result is None:
+                req.fail(_per_request_error(RuntimeError(
+                    f"request {req.request_id} missing from batch "
+                    f"{outcome.job_id} results")))
+                continue
             t_d, m_d = time.time(), time.monotonic()
             if req.cache_key:
                 self.cache.put(req.cache_key, result)
@@ -1057,6 +1201,21 @@ class ClusteringService:
         snap["queue_too_large"] = self.queue.too_large_rejected
         snap["lanes"] = {name: lane.stats()
                          for name, lane in self.lanes.items()}
+        # continuous-batching scorecard: the metrics object counted
+        # joins/retires/occupancy; the service adds its knobs, the
+        # executable-cache counters, and per-lane device idle fraction
+        # (1 - busy/uptime: the "keep the device hot" number)
+        up = (time.monotonic() - self._started_at
+              if self._started_at is not None else 0.0)
+        snap["continuous"].update({
+            "enabled": self.continuous,
+            "join_window_s": self.join_window_s,
+            "device_idle_frac": {
+                name: (max(0.0, 1.0 - lane.stats()["busy_s"] / up)
+                       if up > 0 else None)
+                for name, lane in self.lanes.items()},
+        })
+        snap["exec_cache"] = self.exec_cache.stats()
         snap["wal"] = self.wal.stats() if self.wal is not None else None
         ws = self.metrics.window_stats()
         snap["slo"] = self.slo.evaluate(

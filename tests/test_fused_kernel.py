@@ -1,0 +1,135 @@
+"""Fused masked K-Means step kernel vs the XLA reference (interpret mode).
+
+The fused kernel (``kernels/distance/fused.py``) computes assignment,
+masked per-centroid sums/counts, and masked inertia in ONE pass over the
+points; ``core.kmeans.masked_kmeans_step`` is the two-pass XLA reference.
+The serving hot loop swaps between them per executor
+(``kmeans.masked_step_fn``), so their agreement — including on padded
+slots, empty clusters, and degenerate ``k > n`` shapes — is load-bearing
+for batch correctness, not just a perf claim.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kmeans
+from repro.kernels.distance.fused import fused_masked_assign_update
+
+
+def _problem(n, k, d, seed, n_real=None):
+    """Random points/centroids plus a mask with the tail masked off."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    mask = np.arange(n) < (n if n_real is None else n_real)
+    return jnp.asarray(x), jnp.asarray(c), jnp.asarray(mask)
+
+
+def _cfg(k, **kw):
+    return kmeans.KMeansConfig(k=k, use_kernel=False, **kw)
+
+
+@pytest.mark.parametrize(
+    "n,k,d,n_real",
+    [
+        (128, 4, 2, None),    # full batch, no padding
+        (256, 8, 4, 200),     # padded tail carries no weight
+        (64, 8, 2, 8),        # mostly padding (a near-empty joined slot)
+        (96, 16, 3, 96),      # k big relative to n: empty clusters likely
+        (5, 8, 2, 5),         # k > n — every surplus centroid stays empty
+        (513, 6, 7, 400),     # nothing divides the tile sizes
+    ],
+)
+def test_fused_step_matches_reference(n, k, d, n_real):
+    x, c, mask = _problem(n, k, d, seed=n * 31 + k, n_real=n_real)
+    cfg = _cfg(k)
+
+    ref = kmeans.masked_kmeans_step(x, c, mask, cfg)
+    got = kmeans.fused_masked_kmeans_step(x, c, mask, cfg)
+
+    for r, g, name in zip(ref, got, ("assign", "centroids", "shift",
+                                     "inertia")):
+        if name == "assign":
+            # masked-out rows are still assigned (row-wise work) — the
+            # contract says identical semantics on EVERY row
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(r), np.asarray(g), rtol=1e-5, atol=1e-5,
+                err_msg=name)
+
+
+def test_empty_clusters_keep_old_centers():
+    # all points in one tight blob, centroids scattered far away: only the
+    # nearest centroid accumulates mass, the rest must come back verbatim
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0.0, 0.01, size=(64, 2)).astype(np.float32))
+    c = jnp.asarray(np.array(
+        [[0.0, 0.0], [50.0, 50.0], [-50.0, 50.0], [50.0, -50.0]],
+        np.float32))
+    mask = jnp.ones((64,), bool)
+    cfg = _cfg(4)
+
+    assign, c_new, shift, inertia = kmeans.fused_masked_kmeans_step(
+        x, c, mask, cfg)
+    np.testing.assert_array_equal(np.asarray(assign), np.zeros(64))
+    # the three empty clusters keep their old centers (paper: no respawn)
+    np.testing.assert_array_equal(np.asarray(c_new)[1:], np.asarray(c)[1:])
+    np.testing.assert_allclose(
+        np.asarray(c_new)[0], np.mean(np.asarray(x), axis=0),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_fully_masked_batch_is_inert():
+    # a continuous batch's freed slot: zero weight everywhere, so nothing
+    # accumulates and every centroid survives the step unchanged
+    x, c, _ = _problem(32, 4, 2, seed=7)
+    mask = jnp.zeros((32,), bool)
+    cfg = _cfg(4)
+    _, c_new, shift, inertia = kmeans.fused_masked_kmeans_step(
+        x, c, mask, cfg)
+    np.testing.assert_array_equal(np.asarray(c_new), np.asarray(c))
+    assert float(shift) == 0.0
+    assert float(inertia) == 0.0
+
+
+def test_raw_fused_accumulators_match_manual():
+    # the kernel's raw outputs (sums/counts/inertia) against a hand-rolled
+    # masked accumulation — pins the accumulator contract, not just the
+    # post-fixup centroids
+    x, c, mask = _problem(200, 6, 3, seed=3, n_real=150)
+    idx, sums, counts, inertia = fused_masked_assign_update(x, c, mask)
+
+    xn = np.asarray(x)
+    cn = np.asarray(c)
+    w = np.asarray(mask, np.float32)
+    d2 = ((xn[:, None, :] - cn[None, :, :]) ** 2).sum(-1)
+    ref_idx = d2.argmin(1)
+    np.testing.assert_array_equal(np.asarray(idx), ref_idx)
+
+    onehot = np.eye(6, dtype=np.float32)[ref_idx] * w[:, None]
+    np.testing.assert_allclose(np.asarray(sums), onehot.T @ xn,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(counts), onehot.sum(0),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(inertia),
+                               float((d2.min(1) * w).sum()),
+                               rtol=1e-5)
+
+
+def test_masked_step_fn_routes_by_executor():
+    # kernel configs get the fused pallas step; the jax-ref fallback keeps
+    # the two-pass XLA step — and both converge to the same fixed point
+    assert kmeans.masked_step_fn(_cfg(4)) is kmeans.masked_kmeans_step_jit
+    cfg_kernel = kmeans.KMeansConfig(k=4, use_kernel=True)
+    assert (kmeans.masked_step_fn(cfg_kernel)
+            is kmeans.fused_masked_kmeans_step_jit)
+
+    x, c, mask = _problem(128, 4, 2, seed=11, n_real=100)
+    ref = kmeans.masked_step_fn(_cfg(4))(x, c, mask, _cfg(4))
+    got = kmeans.masked_step_fn(cfg_kernel)(x, c, mask, cfg_kernel)
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+    np.testing.assert_allclose(np.asarray(ref[1]), np.asarray(got[1]),
+                               rtol=1e-5, atol=1e-5)
