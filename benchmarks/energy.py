@@ -24,7 +24,16 @@ import os
 from collections import defaultdict
 from typing import Dict, List
 
-P_ACTIVE_WATTS = 3.0       # tablet-class active power (paper's device class)
+# Active power now comes from the service's device-class profiles
+# (repro.service.energy is the single source of truth; the scalar here
+# is the little/CPU class, numerically identical to the old constant).
+# The guarded import keeps this script runnable standalone without src/
+# on the path.
+try:
+    from repro.service.energy import LITTLE as _LITTLE_CLASS
+    P_ACTIVE_WATTS = _LITTLE_CLASS.active_watts
+except ImportError:      # standalone fallback: the historical constant
+    P_ACTIVE_WATTS = 3.0
 PJ_PER_FLOP = 1.0
 PJ_PER_HBM_BYTE = 10.0
 PJ_PER_WIRE_BYTE = 5.0

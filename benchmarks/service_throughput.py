@@ -938,6 +938,183 @@ def run_speed_gate(smoke: bool = False) -> Dict:
     return {"continuous": cont, "batch": batch, "problems": problems}
 
 
+def run_energy_gate(smoke: bool = False) -> Dict:
+    """Energy gate: the same trace uncapped then under a power cap.
+
+    Three contracts, all CI-enforced:
+
+    1. **The cap holds.**  The capped replay's pacer-charged joules over
+       its wall clock must stay at or under the cap wattage (plus the
+       bucket's initial burst, amortised over the run), and the pacer
+       must have actually throttled at least once — a cap that never
+       bites proves nothing.
+    2. **Energy does not regress.**  Pacing stalls dispatch, so queued
+       requests coalesce into fuller batches; modeled joules per real
+       point must not grow past the uncapped baseline (small tolerance
+       for host timing noise).
+    3. **Budgets reject honestly.**  A tenant that overdraws its joule
+       budget gets ``EnergyBudgetExceeded`` with a positive, bounded
+       ``retry_after`` — and a resubmit after waiting it out is
+       admitted.
+
+    The capped run's ``/metrics`` exposition must also parse cleanly and
+    carry the ``repro_energy_*`` family.
+    """
+    import numpy as np
+
+    from repro.service import ClusteringService, MiningClient
+    from repro.service.queue import EnergyBudgetExceeded
+    from repro.service.telemetry import exposition_errors, render_prometheus
+
+    n = 8 if smoke else 16
+    rng = np.random.default_rng(97)
+    trace = [rng.normal(0.0, 1.0, size=(192 + 16 * i, 2)).astype(np.float32)
+             for i in range(n)]
+    problems: List[str] = []
+
+    def replay(power_cap):
+        # batch-at-a-time on purpose: continuous joins enter an in-flight
+        # batch without passing the dispatch pacer, so a capped replay
+        # with joining would be unpaced for most of its requests
+        workdir = tempfile.mkdtemp(prefix="svc_energy_")
+        try:
+            service = ClusteringService(
+                workdir, max_batch=4, max_wait_s=0.005, cache_entries=0,
+                continuous=False,
+                power_cap_watts=power_cap,
+                power_cap_burst_joules=(None if power_cap is None
+                                        else power_cap * 0.25))
+            client = MiningClient(service=service)
+            t0 = time.monotonic()
+            with service:
+                handles = []
+                for i, x in enumerate(trace):
+                    # trickle the trace in: uncapped, each request mostly
+                    # rides its own small batch; under the cap the stalled
+                    # lane lets the queue coalesce fuller batches — the
+                    # joules/point win the gate demands
+                    handles.append(client.submit(
+                        f"tenant-{i % 3}", "kmeans", x,
+                        params={"k": 4, "seed": i, "max_iters": 10},
+                        executor="jax-ref"))
+                    time.sleep(0.02)
+                for h in handles:
+                    h.result(300)
+                wall = time.monotonic() - t0
+            # snapshot after stop(): batch records (and their joules)
+            # land once the lanes drain
+            snap = service.metrics_snapshot()
+            text = render_prometheus(snap)
+            return wall, snap, text
+        finally:
+            shutil.rmtree(workdir, ignore_errors=True)
+
+    replay(None)             # warm-up: pay the one-time jit compiles
+    wall_u, snap_u, _ = replay(None)
+    energy_u = snap_u["energy"]
+    draw_u = energy_u["joules_total"] / max(wall_u, 1e-9)
+    # well under the uncapped draw, so the pacer must bite
+    cap_watts = max(draw_u * 0.4, 1e-3)
+    wall_c, snap_c, text = replay(cap_watts)
+    energy_c = snap_c["energy"]
+    cap = energy_c.get("cap") or {}
+
+    burst = float(cap.get("burst_joules") or 0.0)
+    paced_draw = cap.get("spent_joules", 0.0) / max(wall_c, 1e-9)
+    allowed = cap_watts * 1.05 + burst / max(wall_c, 1e-9)
+    if paced_draw > allowed:
+        problems.append(
+            f"capped run drew {paced_draw:.4f} W (pacer-charged) against "
+            f"a {cap_watts:.4f} W cap (+{burst:.3f} J burst)")
+    if not cap.get("throttles"):
+        problems.append("the power cap never throttled a batch — "
+                        "the capped replay proves nothing")
+    jpp_u = energy_u.get("joules_per_point", 0.0)
+    jpp_c = energy_c.get("joules_per_point", 0.0)
+    if jpp_u <= 0.0:
+        problems.append("uncapped run recorded zero joules per point")
+    elif jpp_c > jpp_u * 1.05:
+        problems.append(
+            f"joules/point regressed under the cap: "
+            f"{jpp_c * 1e3:.4f} mJ vs {jpp_u * 1e3:.4f} mJ uncapped")
+
+    # -- per-tenant joule budget: honest rejection + honest retry_after --
+    rate, burst_j = 0.05, 0.05
+    workdir = tempfile.mkdtemp(prefix="svc_energy_budget_")
+    try:
+        service = ClusteringService(
+            workdir, max_batch=4, max_wait_s=0.005, cache_entries=0,
+            tenant_joule_rate=rate, tenant_joule_burst=burst_j)
+        client = MiningClient(service=service)
+        payload = [rng.normal(0.0, 1.0, size=(4096, 2)).astype(np.float32)
+                   for _ in range(3)]
+        params = {"k": 8, "max_iters": 5}
+        rejected = None
+        with service:
+            first = client.submit("hog", "kmeans", payload[0],
+                                  params=dict(params, seed=0),
+                                  executor="numpy-mt")
+            try:
+                client.submit("hog", "kmeans", payload[1],
+                              params=dict(params, seed=1),
+                              executor="numpy-mt")
+            except EnergyBudgetExceeded as exc:
+                rejected = exc
+            if rejected is None:
+                problems.append("over-budget tenant was admitted")
+            else:
+                # retry_after must be positive and bounded by the worst
+                # case (empty bucket + full debt): (need + burst) / rate
+                worst = (min(rejected.needed_joules, burst_j)
+                         + burst_j) / rate
+                if not (0.0 < rejected.retry_after <= worst + 1e-6):
+                    problems.append(
+                        f"retry_after {rejected.retry_after!r} outside "
+                        f"(0, {worst:.2f}]")
+                if rejected.needed_joules <= 0.0:
+                    problems.append(
+                        f"rejection priced at "
+                        f"{rejected.needed_joules!r} J")
+                time.sleep(rejected.retry_after + 0.05)
+                retried = client.submit("hog", "kmeans", payload[2],
+                                        params=dict(params, seed=2),
+                                        executor="numpy-mt")
+                retried.result(300)
+            first.result(300)
+            rejections = service.metrics_snapshot()[
+                "energy"]["budget"]["rejections"]
+        if rejected is not None and rejections < 1:
+            problems.append("rejection not counted in "
+                            "energy.budget.rejections")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    problems.extend(f"exposition: {e}" for e in exposition_errors(text))
+    for needle in ("repro_energy_modeled_watts",
+                   "repro_energy_power_cap_watts",
+                   "repro_energy_joules_total",
+                   "repro_energy_cap_throttle_seconds_total",
+                   "repro_energy_budget_rejections_total",
+                   'repro_energy_class_joules_total{device_class="big"}'):
+        if needle not in text:
+            problems.append(f"missing series: {needle}")
+
+    return {
+        "requests": n,
+        "uncapped": {"wall_s": wall_u, "draw_w": draw_u,
+                     "joules_per_point": jpp_u,
+                     "joules_total": energy_u.get("joules_total", 0.0)},
+        "capped": {"wall_s": wall_c, "cap_watts": cap_watts,
+                   "paced_draw_w": paced_draw,
+                   "joules_per_point": jpp_c,
+                   "throttles": cap.get("throttles", 0),
+                   "throttled_s": cap.get("throttled_s_total", 0.0)},
+        "budget_retry_after": (rejected.retry_after
+                               if rejected is not None else None),
+        "problems": problems,
+    }
+
+
 def build_parser() -> argparse.ArgumentParser:
     """The CLI surface (separate so the docs gate can introspect it)."""
     ap = argparse.ArgumentParser()
@@ -982,6 +1159,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "with at least one join and one early retire and "
                          "ZERO recompiles or executable-cache misses "
                          "after warm-up")
+    ap.add_argument("--energy-gate", action="store_true",
+                    help="run ONLY the energy gate: replay the same trace "
+                         "uncapped and under a power cap; exit nonzero "
+                         "unless the capped run's pacer-charged draw "
+                         "stays at or under the cap with at least one "
+                         "throttle, joules/point does not regress, an "
+                         "over-budget tenant is rejected with a valid "
+                         "retry_after, and the repro_energy_* exposition "
+                         "validates")
     ap.add_argument("--recover-child", nargs=2, metavar=("WORKDIR", "N"),
                     help=argparse.SUPPRESS)   # internal: gate child mode
     return ap
@@ -1061,6 +1247,25 @@ def main() -> None:
         print("# continuous batching: device stayed hot — joins filled "
               "freed slots, shorts retired early, zero recompiles after "
               "warm-up")
+        return
+    if args.energy_gate:
+        gate = run_energy_gate(smoke=args.smoke)
+        u, c = gate["uncapped"], gate["capped"]
+        print(f"# energy gate: {gate['requests']} requests; uncapped "
+              f"{u['draw_w']:.3f} W / {u['joules_per_point'] * 1e3:.4f} "
+              f"mJ/point in {u['wall_s']:.2f}s; capped at "
+              f"{c['cap_watts']:.3f} W -> {c['paced_draw_w']:.3f} W / "
+              f"{c['joules_per_point'] * 1e3:.4f} mJ/point in "
+              f"{c['wall_s']:.2f}s ({c['throttles']} throttle(s), "
+              f"{c['throttled_s']:.2f}s blocked); budget retry_after "
+              f"{gate['budget_retry_after']}")
+        if gate["problems"]:
+            for p in gate["problems"]:
+                print(f"# FAIL: {p}", file=sys.stderr)
+            sys.exit(1)
+        print("# energy gate: modeled draw held under the cap, "
+              "joules/point did not regress, budgets reject with an "
+              "honest retry_after")
         return
     if args.bucket_sweep:
         rows = run_bucket_sweep(smoke=args.smoke)

@@ -42,6 +42,7 @@ from repro.runtime.preemption import PreemptionGuard
 from repro.service import (
     BacklogFull,
     ClusteringService,
+    EnergyBudgetExceeded,
     JobSuspended,
     MiningClient,
     TelemetryServer,
@@ -49,6 +50,10 @@ from repro.service import (
 )
 
 MAX_RESUBMITS = 3
+# An energy-budget rejection whose refill takes longer than this is shed
+# immediately — a load generator shouldn't stall the offered rate waiting
+# for one tenant's joule bucket.
+MAX_ENERGY_WAIT_S = 2.0
 
 
 def build_workload(n_requests: int, tenants: int, algo: str, *,
@@ -93,6 +98,10 @@ def submit_with_backoff(client: MiningClient, tenant, algo, data, *,
         except BacklogFull as e:
             if attempt + 1 == MAX_RESUBMITS:
                 break              # shedding anyway; don't sleep for it
+            time.sleep(e.retry_after)
+        except EnergyBudgetExceeded as e:
+            if e.retry_after > MAX_ENERGY_WAIT_S or attempt + 1 == MAX_RESUBMITS:
+                break              # joule refill too slow — shed the request
             time.sleep(e.retry_after)
     return None   # shed after MAX_RESUBMITS rejects
 
@@ -181,6 +190,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "docs/bucketing_study.md)")
     ap.add_argument("--ttl", type=float, default=None,
                     help="per-request deadline, seconds from submit")
+    ap.add_argument("--power-cap", type=float, default=None,
+                    help="service-wide dispatch power cap, watts: lanes "
+                         "acquire each batch's predicted joules from a "
+                         "token bucket refilled at this rate, so modeled "
+                         "draw stays at or under the cap (latency is "
+                         "traded for energy; see docs/energy_study.md)")
+    ap.add_argument("--joule-rate", type=float, default=None,
+                    help="per-tenant joule budget refill rate, J/s: "
+                         "admission prices each request with the device-"
+                         "class cost model and rejects over-budget "
+                         "tenants with EnergyBudgetExceeded + retry_after")
+    ap.add_argument("--joule-burst", type=float, default=50.0,
+                    help="per-tenant joule budget bucket depth, joules "
+                         "(only meaningful with --joule-rate)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus text on this port for the run "
                          "(GET /metrics; also /snapshot, /trace, /healthz; "
@@ -221,6 +244,11 @@ def run_fleet(args) -> None:
         "join_window_s": args.join_window,
         "bucket_policy": args.bucket_policy,
     }
+    if args.power_cap is not None:
+        worker_config["power_cap_watts"] = args.power_cap
+    if args.joule_rate is not None:
+        worker_config["tenant_joule_rate"] = args.joule_rate
+        worker_config["tenant_joule_burst"] = args.joule_burst
     if args.warm_start is not None:
         worker_config["warm_start"] = json.loads(args.warm_start)
     if args.device_budget_mb is not None:
@@ -281,6 +309,9 @@ def main() -> None:
         bucket_policy=args.bucket_policy,
         device_budget_bytes=(None if args.device_budget_mb is None
                              else args.device_budget_mb * 2**20),
+        power_cap_watts=args.power_cap,
+        tenant_joule_rate=args.joule_rate,
+        tenant_joule_burst=args.joule_burst,
     )
     client = MiningClient(service=service)
     exporter = None
@@ -341,6 +372,22 @@ def main() -> None:
     print(f"# bucketing [{bkt['policy']['name']}]: "
           f"padding waste {bkt['padding_waste']:.2%}, "
           f"{bkt['recompiles']} compiled shape(s)")
+    energy = snap.get("energy") or {}
+    cap = energy.get("cap") or {}
+    by_class = {name: f"{tot.get('modeled_joules', 0.0):.2f}J/"
+                      f"{tot.get('batches', 0)}b"
+                for name, tot in sorted((energy.get("by_class")
+                                         or {}).items())}
+    cap_note = (f", cap {energy['power_cap_watts']:g}W "
+                f"(throttled {cap.get('throttled_s_total', 0.0):.2f}s "
+                f"over {cap.get('throttles', 0)} batch(es))"
+                if energy.get("power_cap_watts") is not None else "")
+    budget = energy.get("budget") or {}
+    budget_note = (f", budget rejections {budget.get('rejections', 0)}"
+                   if budget.get("tenant_joule_rate") is not None else "")
+    print(f"# energy: {energy.get('joules_total', 0.0):.2f}J total, "
+          f"{energy.get('joules_per_point', 0.0) * 1e3:.3f}mJ/point, "
+          f"classes {by_class}{cap_note}{budget_note}")
     slo = snap["slo"]
     print(f"# slo: {'OK' if slo['ok'] else 'VIOLATED'} — "
           f"p{slo['latency_percentile']:g} "

@@ -34,6 +34,8 @@ estimates are decided (and persisted) before any data moves.
     wal       — write-ahead admission log: admitted means durable
                 (crash-safe replay of requests not yet batched)
     cache     — content-hash result cache (disk spill + TTL)
+    energy    — device-class cost models (simulated big.LITTLE), the
+                power-cap pacer, and the shared active-power constants
     metrics   — latency percentiles, batch occupancy, energy proxy +
                 per-paradigm joules-per-work EWMA (dispatch feedback)
     trace     — span-based request tracer: one trace id from WAL append
@@ -65,6 +67,13 @@ from repro.service.dispatch import (
     ParadigmRegistry,
     default_registry,
 )
+from repro.service.energy import (
+    BIG,
+    LITTLE,
+    DeviceClass,
+    PowerCapPacer,
+    device_class_for,
+)
 from repro.service.executor import BatchExecutor, BatchOutcome
 from repro.service.metrics import ServiceMetrics
 from repro.service.queue import (
@@ -73,6 +82,7 @@ from repro.service.queue import (
     PRIORITY_NORMAL,
     AdmissionQueue,
     BacklogFull,
+    EnergyBudgetExceeded,
     JobSuspended,
     MiningRequest,
     RateLimited,
@@ -123,7 +133,13 @@ __all__ = [
     "BatchKey",
     "BucketPolicy",
     "BatchOutcome",
+    "BIG",
     "ClusteringService",
+    "DeviceClass",
+    "EnergyBudgetExceeded",
+    "LITTLE",
+    "PowerCapPacer",
+    "device_class_for",
     "EventLog",
     "EXECUTOR_DISTRIBUTED",
     "EXECUTOR_JAX_REF",

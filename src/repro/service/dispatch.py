@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core import dbscan, kmeans
 from repro.runtime import backend as backend_mod
+from repro.service.energy import classify_work, device_class_for
 
 EXECUTOR_PALLAS = "pallas-kernel"
 EXECUTOR_JAX_REF = "jax-ref"
@@ -67,11 +68,13 @@ _KMEANS_ITERS_ESTIMATE = 20
 # headroom for the batch, compiled executables, and collective buffers).
 DEVICE_BUDGET_FRACTION = 0.25
 
-# Prior for the modeled-joules estimate in a plan before any batch of that
-# paradigm has run: the tablet-class active power from benchmarks/energy.py
-# over an assumed 5e7 fused ops/s — replaced by the per-paradigm EWMA
-# (service/metrics.py) as soon as real executions exist.
-DEFAULT_JOULES_PER_WORK = 3.0 / 5e7
+# Deprecated alias: the pre-refactor scalar prior (little-class J/work).
+# Plans are now priced per device class via service/energy.py profiles —
+# the little class's joules_per_work is bit-identical to the old
+# 3.0 / 5e7 value, so historical callers see the same number.
+from repro.service.energy import LITTLE as _LITTLE_CLASS
+
+DEFAULT_JOULES_PER_WORK = _LITTLE_CLASS.joules_per_work
 
 # DBSCAN pad isolation: padded rows sit on a far diagonal in feature 0 so
 # each pad is outside eps of every real point *and* of every other pad —
@@ -117,10 +120,13 @@ class ExecutionPlan:
 
     ``devices``/``shards``/``shard_rows`` describe placement (single-device
     plans have ``shards == 1``); ``cost`` is the fused-op estimate the lane
-    pool balances on; ``modeled_joules`` is the energy estimate (EWMA
-    joules-per-work x cost, or the prior).  ``config`` is the paradigm's
-    private payload (the compiled-program config) and never serialises —
-    :meth:`summary` is the JSON-able view stored in the durable job record.
+    pool balances on; ``device_class`` names the simulated SoC cluster the
+    paradigm executes on (``service/energy.py`` big/little profile) and
+    ``modeled_joules`` is priced against that class (EWMA joules-per-work x
+    cost when a measured hint exists, else the class's affine power model).
+    ``config`` is the paradigm's private payload (the compiled-program
+    config) and never serialises — :meth:`summary` is the JSON-able view
+    stored in the durable job record.
     """
 
     paradigm: str
@@ -133,6 +139,7 @@ class ExecutionPlan:
     shards: int = 1            # shard count (1 = unsharded)
     shard_rows: int = 0        # padded rows per shard
     cost: float = 0.0          # fused-op estimate (dispatch cost model)
+    device_class: str = ""     # energy.DEVICE_CLASSES key pricing the plan
     modeled_joules: float = 0.0
     config: Any = None         # paradigm-private; not serialised
 
@@ -148,6 +155,7 @@ class ExecutionPlan:
             "shards": self.shards,
             "shard_rows": self.shard_rows,
             "cost": self.cost,
+            "device_class": self.device_class,
             "modeled_joules": self.modeled_joules,
         }
 
@@ -183,7 +191,10 @@ class Paradigm:
     ) -> ExecutionPlan:
         """Default single-device plan; paradigms override placement."""
         cost = estimate_work(algo, n_max, features, batch_size, params)
-        jpw = DEFAULT_JOULES_PER_WORK if energy_hint is None else energy_hint
+        cls = device_class_for(self.name)
+        # measured EWMA beats the static class model once batches exist
+        joules = (energy_hint * cost if energy_hint is not None
+                  else cls.modeled_joules(cost))
         return ExecutionPlan(
             paradigm=self.name,
             algo=algo,
@@ -195,7 +206,8 @@ class Paradigm:
             shards=1,
             shard_rows=n_max,
             cost=cost,
-            modeled_joules=jpw * cost,
+            device_class=cls.name,
+            modeled_joules=joules,
             config=self._config(algo, params),
         )
 
@@ -571,7 +583,9 @@ class DistributedParadigm(Paradigm):
         shards = max(1, backend.device_count)
         rows = dist.shard_rows(n_max, shards)
         cost = estimate_work(algo, n_max, features, batch_size, params)
-        jpw = DEFAULT_JOULES_PER_WORK if energy_hint is None else energy_hint
+        cls = device_class_for(self.name)
+        joules = (energy_hint * cost if energy_hint is not None
+                  else cls.modeled_joules(cost))
         return ExecutionPlan(
             paradigm=self.name,
             algo=algo,
@@ -583,7 +597,8 @@ class DistributedParadigm(Paradigm):
             shards=shards,
             shard_rows=rows,
             cost=cost,
-            modeled_joules=jpw * cost,
+            device_class=cls.name,
+            modeled_joules=joules,
             config=self._config(algo, params),
         )
 
@@ -875,12 +890,17 @@ class ParadigmRegistry:
         list: a pinned request never rides another lane.  A request whose
         working set exceeds the per-device budget has exactly one home:
         the distributed paradigm (no caller opt-in, no spill lanes).
+        Selection reasons about (paradigm x device class): each paradigm
+        executes on a simulated big/little SoC cluster
+        (``service/energy.py``), and the energy-optimal class for the
+        work size — little below the big class's crossover, where its
+        dispatch overhead dominates — gates which paradigms compete.
         ``energy_hints`` (EWMA modeled joules per unit work, from
-        :class:`repro.service.metrics.ServiceMetrics`) tie-break the
-        accelerated candidates toward the cheaper paradigm — the paper's
-        Fig. 9 energy comparison closed into a control loop.  ``bucket``
-        (the service's bucket policy) decides the padded shape the budget
-        check prices; pow2 by default.
+        :class:`repro.service.metrics.ServiceMetrics`) then tie-break the
+        surviving candidates toward the measured-cheaper paradigm — the
+        paper's Fig. 9 energy comparison closed into a control loop.
+        ``bucket`` (the service's bucket policy) decides the padded shape
+        the budget check prices; pow2 by default.
         """
         if explicit is not None:
             self.get(explicit)
@@ -891,9 +911,11 @@ class ParadigmRegistry:
         # the distributed lane exists *for* oversized requests; it never
         # competes for work that fits one device
         pool = [nm for nm in self._paradigms if nm != EXECUTOR_DISTRIBUTED]
-        if estimate_work(algo, n, d, batch_size, params) < SMALL_WORK_THRESHOLD:
-            return ([name for name in (EXECUTOR_NUMPY_MT,) if name in pool]
-                    or sorted(pool) or self.names())
+        work = estimate_work(algo, n, d, batch_size, params)
+        if classify_work(work).name == "little":
+            little = sorted(nm for nm in pool
+                            if device_class_for(nm).name == "little")
+            return little or sorted(pool) or self.names()
         backend = backend_mod.discover_backend()
         accel = ([EXECUTOR_PALLAS, EXECUTOR_JAX_REF] if backend.is_tpu
                  else [EXECUTOR_JAX_REF, EXECUTOR_PALLAS])

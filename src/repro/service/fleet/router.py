@@ -49,7 +49,8 @@ import numpy as np
 from repro.service.fleet import rpc
 from repro.service.fleet.hashring import ConsistentHashRing
 from repro.service.fleet.manager import WorkerManager, WorkerSpec
-from repro.service.queue import PRIORITY_NORMAL, BacklogFull, RateLimited
+from repro.service.queue import (PRIORITY_NORMAL, BacklogFull,
+                                 EnergyBudgetExceeded, RateLimited)
 from repro.service.telemetry import TelemetryServer, _Lines
 from repro.service.wal import WalLocked
 
@@ -176,6 +177,11 @@ class FleetStream:
         self.close()
 
 
+# Heartbeat cap_saturation above this marks a worker as power-throttled:
+# placement treats it as heavily loaded and spills traffic elsewhere.
+CAP_SATURATION_AVOID = 0.95
+
+
 class FleetRouter:
     """Consistent-hash front door over a :class:`WorkerManager`'s fleet."""
 
@@ -246,7 +252,18 @@ class FleetRouter:
             def load(name: str) -> int:
                 if self._suspect_until.get(name, 0.0) > now:
                     return 1 << 30
-                return self._outstanding.get(name, 0)
+                # a cap-saturated worker (heartbeat says modeled watts are
+                # pinned at its --power-cap) is throttling dispatch: heavy
+                # penalty, but below suspect so it still beats a dead one
+                try:
+                    health = self.manager.worker(name).health or {}
+                except KeyError:
+                    health = {}
+                penalty = 0
+                if float(health.get("cap_saturation") or 0.0) > \
+                        CAP_SATURATION_AVOID:
+                    penalty = 1 << 20
+                return self._outstanding.get(name, 0) + penalty
 
             total = sum(self._outstanding.get(n, 0)
                         for n in self.ring.nodes)
@@ -305,7 +322,8 @@ class FleetRouter:
                 if durable:
                     return json.loads(raw.decode())
                 return rpc.decode_result(raw)
-            except (BacklogFull, RateLimited, WalLocked) as exc:
+            except (BacklogFull, RateLimited, EnergyBudgetExceeded,
+                    WalLocked) as exc:
                 # typed pressure: honour the worker's own backoff estimate,
                 # then re-place — bounded load usually spills the retry to
                 # a different worker
@@ -528,10 +546,16 @@ def render_fleet_prometheus(snapshot: Dict[str, Any],
         health = spec.get("health") or {}
         for key, metric in (("queue_depth", "worker_queue_depth"),
                             ("inflight", "worker_inflight"),
-                            ("wal_pending", "worker_wal_pending")):
+                            ("wal_pending", "worker_wal_pending"),
+                            ("modeled_watts", "worker_modeled_watts"),
+                            ("cap_saturation", "worker_cap_saturation")):
             if key in health:
                 out.add(metric, health[key], labels=lab,
                         help_text=f"Per-worker {key} (last heartbeat)")
+        if health.get("power_cap_watts") is not None:
+            out.add("worker_power_cap_watts", health["power_cap_watts"],
+                    labels=lab,
+                    help_text="Per-worker configured power cap")
         snap = snaps.get(name) or {}
         totals = snap.get("totals") or {}
         for key, metric in (("requests", "worker_requests_total"),

@@ -28,7 +28,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.service.queue import (BacklogFull, RateLimited, RequestDropped,
+from repro.service.queue import (BacklogFull, EnergyBudgetExceeded,
+                                 RateLimited, RequestDropped,
                                  RequestTooLarge)
 from repro.service.wal import WalLocked
 
@@ -121,6 +122,11 @@ def encode_error(exc: BaseException) -> Tuple[int, Dict[str, Any]]:
         body.update(tenant=exc.tenant, retry_after=exc.retry_after,
                     rate=exc.rate, burst=exc.burst)
         return 429, body
+    if isinstance(exc, EnergyBudgetExceeded):
+        body.update(tenant=exc.tenant, retry_after=exc.retry_after,
+                    needed_joules=exc.needed_joules,
+                    rate=exc.rate, burst=exc.burst)
+        return 429, body
     if isinstance(exc, WalLocked):
         body.update(root=exc.root, holder_pid=exc.holder_pid,
                     retry_after=exc.retry_after)
@@ -150,6 +156,13 @@ def raise_mapped(status: int, body: Dict[str, Any]) -> None:
                           retry_after=float(body.get("retry_after") or 0.1),
                           rate=float(body.get("rate") or 0.0),
                           burst=int(body.get("burst") or 0))
+    if kind == "EnergyBudgetExceeded":
+        raise EnergyBudgetExceeded(
+            message, tenant=str(body.get("tenant")),
+            retry_after=float(body.get("retry_after") or 0.1),
+            needed_joules=float(body.get("needed_joules") or 0.0),
+            rate=float(body.get("rate") or 0.0),
+            burst=float(body.get("burst") or 0.0))
     if kind == "WalLocked":
         raise WalLocked(message, root=str(body.get("root") or ""),
                         holder_pid=body.get("holder_pid"),

@@ -144,6 +144,14 @@ class FleetWorker:
             "slo_errors_burn": slo.get("errors_burn_rate", 0.0),
             "modeled_joules": (snap.get("totals") or {}).get(
                 "modeled_joules", 0.0),
+            # power surface: the router routes around cap-saturated
+            # workers and the fleet scrape exports per-worker watts
+            "modeled_watts": (snap.get("energy") or {}).get(
+                "modeled_watts", 0.0),
+            "power_cap_watts": (snap.get("energy") or {}).get(
+                "power_cap_watts"),
+            "cap_saturation": (snap.get("energy") or {}).get(
+                "cap_saturation", 0.0),
         }
 
     def _handle_takeover(self, body: Dict[str, Any]) -> Dict[str, Any]:

@@ -20,11 +20,15 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
+import time
 from collections import OrderedDict, defaultdict, deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
-# Same constant as benchmarks/energy.py (tablet-class active power, W).
-P_ACTIVE_WATTS = 3.0
+from repro.service.energy import (DEVICE_CLASSES, active_watts_for,
+                                  device_class_for)
+# Deprecated alias: the single scalar this module used to define is now
+# the little-class profile in service/energy.py (one source of truth).
+from repro.service.energy import P_ACTIVE_WATTS  # noqa: F401  (re-export)
 
 # Percentiles are computed over a sliding window so a long-lived service
 # never grows its metric state without bound; totals are kept as counters.
@@ -34,6 +38,18 @@ DEFAULT_WINDOW = 10_000
 # enough history that one slow batch (cold jit compile) cannot flip
 # dispatch, light enough to track a drifting host.
 ENERGY_EWMA_ALPHA = 0.2
+
+# Staleness decay for the dispatch hints: an executor that stops being
+# selected has its EWMA pulled toward its device class's static prior by
+# this fraction per batch *anyone* runs, so one bad early sample (cold
+# compile) can no longer starve a paradigm forever — after ~2/0.02 = 100
+# foreign batches the hint has mostly recovered and the paradigm gets
+# re-explored.
+HINT_STALENESS_DECAY = 0.02
+
+# Sliding window for the modeled-watts gauge (power = joules in the last
+# WATTS_WINDOW_S seconds / window) — what the --power-cap gate scrapes.
+WATTS_WINDOW_S = 10.0
 
 # The compiled-shape tracker is an LRU bounded at this many entries: it
 # mirrors what a real executable cache can hold, so "first sight" means
@@ -78,6 +94,7 @@ class BatchRecord:
     real_points: int = 0       # sum of item lengths (0 = not reported)
     host_s: float = 0.0        # exec time spent on host work (checkpoints)
     device_s: float = 0.0      # exec_s minus host bookkeeping
+    device_class: str = ""     # energy.DEVICE_CLASSES key (from the plan)
 
     @property
     def occupancy(self) -> float:
@@ -89,8 +106,16 @@ class BatchRecord:
         return self.size * self.n_max
 
     @property
+    def watts(self) -> float:
+        """Active power of the class this batch ran on (Fig. 9: constant
+        per class), falling back to the executor's static class map."""
+        cls = DEVICE_CLASSES.get(self.device_class)
+        return (cls.active_watts if cls is not None
+                else active_watts_for(self.executor))
+
+    @property
     def modeled_joules(self) -> float:
-        return P_ACTIVE_WATTS * self.exec_s
+        return self.watts * self.exec_s
 
 
 class ServiceMetrics:
@@ -113,6 +138,13 @@ class ServiceMetrics:
         self.total_joules = 0.0
         # executor -> EWMA modeled joules per unit work (the dispatch hint)
         self._joules_per_work: Dict[str, float] = {}
+        # executor -> total_batches index of its last EWMA update: the
+        # staleness clock driving decay-toward-prior in energy_hints()
+        self._hint_updated: Dict[str, int] = {}
+        # device class -> lifetime energy accounting (the frontier axis)
+        self._class_totals: Dict[str, Dict[str, float]] = {}
+        # (monotonic stamp, joules) of recent batches for modeled_watts()
+        self._joule_events: Deque[Tuple[float, float]] = deque(maxlen=4096)
         # -- bucketing scorecard (lifetime) ---------------------------------
         # real vs padded points executed, and the distinct compiled-program
         # shapes seen: each fresh (executor, algo, features, n_max) combo
@@ -207,16 +239,31 @@ class ServiceMetrics:
         features: int = 0,
         host_s: float = 0.0,
         device_s: float = 0.0,
+        device_class: str = "",
     ) -> None:
+        cls_name = (device_class
+                    or device_class_for(executor).name)
+        watts = DEVICE_CLASSES[cls_name].active_watts \
+            if cls_name in DEVICE_CLASSES else active_watts_for(executor)
         with self._lock:
             self._batches.append(BatchRecord(
                 algo=algo, executor=executor, size=size, capacity=capacity,
                 n_max=n_max, exec_s=exec_s, resumed=resumed,
                 real_points=int(real_points),
                 host_s=float(host_s), device_s=float(device_s),
+                device_class=cls_name,
             ))
             self.total_batches += 1
-            self.total_joules += P_ACTIVE_WATTS * exec_s
+            joules = watts * exec_s
+            self.total_joules += joules
+            self._joule_events.append((time.monotonic(), joules))
+            cls_tot = self._class_totals.setdefault(cls_name, {
+                "batches": 0, "exec_s": 0.0, "modeled_joules": 0.0,
+                "real_points": 0})
+            cls_tot["batches"] += 1
+            cls_tot["exec_s"] += float(exec_s)
+            cls_tot["modeled_joules"] += joules
+            cls_tot["real_points"] += int(real_points)
             if real_points > 0:
                 self.total_real_points += int(real_points)
                 self.total_padded_points += int(size) * int(n_max)
@@ -232,17 +279,47 @@ class ServiceMetrics:
             if resumed:
                 self.resumed_batches += 1
             if work > 0.0 and exec_s > 0.0:
-                inst = P_ACTIVE_WATTS * exec_s / work
-                old = self._joules_per_work.get(executor)
+                inst = watts * exec_s / work
+                # fold in accumulated staleness decay first, so a paradigm
+                # resuming after a long idle blends the *recovered* value
+                old = self._decayed_hint_locked(executor)
                 self._joules_per_work[executor] = (
                     inst if old is None
                     else (1.0 - ENERGY_EWMA_ALPHA) * old
                     + ENERGY_EWMA_ALPHA * inst)
+                self._hint_updated[executor] = self.total_batches
+
+    def _decayed_hint_locked(self, name: str) -> Optional[float]:
+        """The stored EWMA pulled toward its device class's static prior
+        by ``HINT_STALENESS_DECAY`` per batch since its last update —
+        an executor nobody selects converges back to the prior instead
+        of being starved forever by one bad early sample."""
+        value = self._joules_per_work.get(name)
+        if value is None:
+            return None
+        stale = self.total_batches - self._hint_updated.get(
+            name, self.total_batches)
+        if stale <= 0:
+            return value
+        prior = device_class_for(name).joules_per_work
+        keep = (1.0 - HINT_STALENESS_DECAY) ** stale
+        return prior + (value - prior) * keep
 
     def energy_hints(self) -> Dict[str, float]:
-        """Per-executor EWMA modeled joules per unit work (dispatch input)."""
+        """Per-executor EWMA modeled joules per unit work (dispatch
+        input), staleness-decayed toward each executor's class prior."""
         with self._lock:
-            return dict(self._joules_per_work)
+            return {name: self._decayed_hint_locked(name)
+                    for name in self._joules_per_work}
+
+    def modeled_watts(self, window_s: float = WATTS_WINDOW_S) -> float:
+        """Modeled power over the trailing window: joules of batches that
+        finished in the last ``window_s`` seconds / window.  The gauge
+        the ``--power-cap`` gate compares against the cap."""
+        cutoff = time.monotonic() - max(1e-6, window_s)
+        with self._lock:
+            joules = sum(j for (t, j) in self._joule_events if t >= cutoff)
+        return joules / max(1e-6, window_s)
 
     def record_suspended(self) -> None:
         with self._lock:
@@ -275,7 +352,13 @@ class ServiceMetrics:
             batches = list(self._batches)
             suspended = self.suspended_batches
             resumed = self.resumed_batches
-            jpw = dict(self._joules_per_work)
+            jpw = {name: self._decayed_hint_locked(name)
+                   for name in self._joules_per_work}
+            by_class = {name: dict(tot)
+                        for name, tot in self._class_totals.items()}
+            cutoff = time.monotonic() - WATTS_WINDOW_S
+            watts_now = sum(j for (t, j) in self._joule_events
+                            if t >= cutoff) / WATTS_WINDOW_S
             totals = {
                 "requests": self.total_requests,
                 "cache_hits": self.total_cache_hits,
@@ -377,8 +460,25 @@ class ServiceMetrics:
             "by_reason": by_reason,
         }
 
+        for name, tot in by_class.items():
+            pts = tot.get("real_points", 0)
+            tot["joules_per_point"] = (
+                tot["modeled_joules"] / pts if pts else 0.0)
+
+        energy = {
+            "modeled_watts": watts_now,
+            "watts_window_s": WATTS_WINDOW_S,
+            "by_class": by_class,
+            "hints": jpw,
+            "classes": {name: {"active_watts": c.active_watts,
+                               "work_per_second": c.work_per_second,
+                               "dispatch_overhead_s": c.dispatch_overhead_s}
+                        for name, c in DEVICE_CLASSES.items()},
+        }
+
         return {
             "totals": totals,           # lifetime; the rest is window-local
+            "energy": energy,
             "bucketing": bucketing,
             "continuous": continuous,
             "stages": stages,

@@ -23,6 +23,15 @@ over its rate is rejected with :class:`RateLimited` carrying the exact
 *depth*, the bucket protects arrival *rate*, so a bursty tenant cannot
 monopolise drain capacity even while the backlog has room.
 
+Per-tenant *energy* is bounded the same way (``tenant_joule_rate``
+joules/s refill, ``tenant_joule_burst`` capacity): each request is
+priced by the service's ``joule_cost`` hook (the device-class model of
+:mod:`repro.service.energy` over the dispatch work estimate) and a
+tenant whose budget cannot cover it is rejected with
+:class:`EnergyBudgetExceeded` carrying the exact ``retry_after`` until
+the deficit refills.  Rate protects the *door*, joules protect the
+*battery* — the paper's energy axis enforced at admission.
+
 Oversized requests (working set beyond one device's memory budget) are
 admitted like any other when the service can shard them — the
 ``too_large`` hook only bounces them (:class:`RequestTooLarge`) on
@@ -97,6 +106,25 @@ class RateLimited(RuntimeError):
         super().__init__(message)
         self.tenant = tenant
         self.retry_after = retry_after
+        self.rate = rate
+        self.burst = burst
+
+
+class EnergyBudgetExceeded(RuntimeError):
+    """Admission rejected: the tenant's joule budget cannot cover the
+    request's predicted energy.
+
+    ``retry_after`` is exact (seconds until the budget refills enough to
+    admit this request), ``needed_joules`` is what the request was
+    priced at, ``rate``/``burst`` echo the budget knobs.
+    """
+
+    def __init__(self, message: str, *, tenant: str, retry_after: float,
+                 needed_joules: float, rate: float, burst: float) -> None:
+        super().__init__(message)
+        self.tenant = tenant
+        self.retry_after = retry_after
+        self.needed_joules = needed_joules
         self.rate = rate
         self.burst = burst
 
@@ -339,16 +367,29 @@ class AdmissionQueue:
                  max_per_tenant: int = 64,
                  tenant_rate: Optional[float] = None,
                  tenant_burst: int = 8,
+                 tenant_joule_rate: Optional[float] = None,
+                 tenant_joule_burst: float = 50.0,
+                 joule_cost: Optional[
+                     Callable[["MiningRequest"], float]] = None,
                  too_large: Optional[
                      Callable[["MiningRequest"], bool]] = None) -> None:
         self.max_backlog = max_backlog
         self.max_per_tenant = max_per_tenant
         self.tenant_rate = tenant_rate      # tokens/s; None = unlimited
         self.tenant_burst = max(1, tenant_burst)
+        # joules/s refill per tenant; None disables the energy budget.
+        # ``joule_cost`` prices one request in predicted joules (set by
+        # the owning service to its device-class cost model).
+        self.tenant_joule_rate = tenant_joule_rate
+        self.tenant_joule_burst = float(tenant_joule_burst)
+        self.joule_cost = joule_cost
         self.too_large = too_large
         # tenant -> [tokens, last_refill_time]
         self._buckets: Dict[str, List[float]] = {}
+        # tenant -> [joules, last_refill_time] (the energy budget twin)
+        self._joule_buckets: Dict[str, List[float]] = {}
         self.rate_limited = 0
+        self.energy_rejected = 0
         self.too_large_rejected = 0
         self._lock = threading.Lock()
         # priority -> (OrderedDict keeps a stable tenant rotation order:
@@ -439,6 +480,55 @@ class AdmissionQueue:
         bucket[0] = tokens - 1.0
         bucket[1] = max(bucket[1], now)
 
+    def _take_joules(self, tenant: str, cost: float, now: float,
+                     take: bool = True) -> None:
+        """Joule-budget twin of :meth:`_take_token`: refill at
+        ``tenant_joule_rate`` J/s up to ``tenant_joule_burst`` J, then
+        charge this request's predicted joules.  A request pricier than
+        the whole burst gates on a *full* bucket and borrows the rest
+        (the bucket goes negative), so it is throttled hard but never
+        starved forever.  ``retry_after`` is exact: seconds until the
+        deficit refills.  ``take=False`` peeks (zero state change)."""
+        assert self.tenant_joule_rate is not None
+        burst = self.tenant_joule_burst
+        need = min(float(cost), burst)
+        bucket = self._joule_buckets.get(tenant)
+        if bucket is None:
+            if not take:
+                return                  # a fresh budget starts full
+            bucket = [burst, now]
+            self._joule_buckets[tenant] = bucket
+        # same backwards-clock discipline as the rate bucket
+        elapsed = max(0.0, now - bucket[1])
+        joules = min(burst, bucket[0] + elapsed * self.tenant_joule_rate)
+        if joules < need:
+            if take:
+                bucket[0] = joules
+                bucket[1] = max(bucket[1], now)
+            self.energy_rejected += 1
+            retry = (need - joules) / self.tenant_joule_rate
+            raise EnergyBudgetExceeded(
+                f"tenant {tenant!r} over its energy budget "
+                f"(needs {cost:.3g} J, {self.tenant_joule_rate:g} J/s "
+                f"refill, burst {burst:g} J); retry in {retry:.3f}s",
+                tenant=tenant, retry_after=retry,
+                needed_joules=float(cost),
+                rate=self.tenant_joule_rate, burst=burst)
+        if not take:
+            return
+        bucket[0] = joules - float(cost)
+        bucket[1] = max(bucket[1], now)
+
+    def _price_joules(self, req: MiningRequest) -> float:
+        """Predicted joules for one request (0.0 when unpriceable)."""
+        if self.joule_cost is None:
+            return 0.0
+        try:
+            return max(0.0, float(self.joule_cost(req)))
+        except Exception:
+            logger.exception("joule_cost hook raised; admitting unpriced")
+            return 0.0
+
     # -- admission -----------------------------------------------------------
 
     def _screen(self, req: MiningRequest) -> None:
@@ -480,11 +570,14 @@ class AdmissionQueue:
         """
         try:
             self._screen(req)
+            cost = self._price_joules(req)
             with self._lock:
                 self._bounds_locked(req)
+                now = time.monotonic()
                 if self.tenant_rate is not None:
-                    self._take_token(req.tenant, time.monotonic(),
-                                     take=False)
+                    self._take_token(req.tenant, now, take=False)
+                if self.tenant_joule_rate is not None and cost > 0.0:
+                    self._take_joules(req.tenant, cost, now, take=False)
         except Exception as e:
             self._notify("rejected", stage="precheck",
                          reason=type(e).__name__, tenant=req.tenant,
@@ -499,13 +592,24 @@ class AdmissionQueue:
         try:
             if not screened:
                 self._screen(req)
+            cost = self._price_joules(req)
             with self._lock:
                 self._bounds_locked(req)
-                # the token is taken only once the request will actually be
-                # admitted: a BacklogFull rejection must not burn rate budget
-                # (the client's honoured retry would then bounce twice)
+                # tokens and joules are taken only once the request will
+                # actually be admitted: a BacklogFull rejection must not
+                # burn rate budget, and an EnergyBudgetExceeded must not
+                # burn a rate token (the client's honoured retry would
+                # then bounce twice) — so peek both buckets first, then
+                # charge both atomically under the one lock
+                now = time.monotonic()
                 if self.tenant_rate is not None:
-                    self._take_token(req.tenant, time.monotonic())
+                    self._take_token(req.tenant, now, take=False)
+                if self.tenant_joule_rate is not None and cost > 0.0:
+                    self._take_joules(req.tenant, cost, now, take=False)
+                if self.tenant_rate is not None:
+                    self._take_token(req.tenant, now)
+                if self.tenant_joule_rate is not None and cost > 0.0:
+                    self._take_joules(req.tenant, cost, now)
                 lane = self._lanes.setdefault(req.priority, OrderedDict())
                 pending = lane.get(req.tenant)
                 if pending is None:

@@ -47,6 +47,8 @@ from repro.service.dispatch import (
     default_registry,
     estimate_work,
 )
+from repro.service.energy import (PowerCapPacer, classify_work,
+                                  device_class_for)
 from repro.service.exec_cache import default_exec_cache
 from repro.service.executor import BatchExecutor, BatchOutcome
 from repro.service.metrics import ServiceMetrics
@@ -91,22 +93,27 @@ class ExecutorLane:
     The queue is priority-ordered (FIFO within a priority), so an
     interactive batch overtakes bulk batches already staged on the lane —
     admission-queue priority carries all the way to execution.  ``load``
-    is the work-estimate sum of queued plus in-flight batches — the
-    quantity the dispatcher minimises when the cost model offers more
-    than one compatible lane.  ``busy_s`` accumulates wall-clock
-    execution time, which is what the overlap benchmark compares against
-    total wall time to show lanes genuinely run concurrently.
+    is the work-estimate sum of queued plus in-flight batches, and
+    ``energy_load`` the predicted-joules sum of the same — the pool
+    balances on joules first (the paper's energy axis as the placement
+    objective), falling back to work on ties.  ``busy_s`` accumulates
+    wall-clock execution time, which is what the overlap benchmark
+    compares against total wall time to show lanes genuinely run
+    concurrently.
     """
 
     def __init__(self, name: str) -> None:
         self.name = name
-        # entries: (priority, seq, batch, est); the shutdown sentinel rides
-        # at +inf priority so every real batch drains before the worker exits
+        # entries: (priority, seq, batch, est, joules); the shutdown
+        # sentinel rides at +inf priority so every real batch drains
+        # before the worker exits
         self.batches: "_queue.PriorityQueue[tuple]" = _queue.PriorityQueue()
         self._seq = itertools.count()
         self._lock = threading.Lock()
         self.queued_work = 0.0
         self.inflight_work = 0.0
+        self.queued_joules = 0.0
+        self.inflight_joules = 0.0
         self.busy_s = 0.0
         self.batches_run = 0
         self.thread: Optional[threading.Thread] = None
@@ -116,22 +123,35 @@ class ExecutorLane:
         with self._lock:
             return self.queued_work + self.inflight_work
 
-    def put(self, batch: MicroBatch, est: float) -> None:
+    @property
+    def energy_load(self) -> float:
+        """Predicted joules queued plus in flight on this lane."""
+        with self._lock:
+            return self.queued_joules + self.inflight_joules
+
+    def put(self, batch: MicroBatch, est: float,
+            joules: float = 0.0) -> None:
         with self._lock:
             self.queued_work += est
-        self.batches.put((batch.priority, next(self._seq), batch, est))
+            self.queued_joules += joules
+        self.batches.put((batch.priority, next(self._seq), batch, est,
+                          joules))
 
     def put_sentinel(self) -> None:
-        self.batches.put((float("inf"), next(self._seq), None, 0.0))
+        self.batches.put((float("inf"), next(self._seq), None, 0.0, 0.0))
 
-    def begin(self, est: float) -> None:
+    def begin(self, est: float, joules: float = 0.0) -> None:
         with self._lock:
             self.queued_work -= est
             self.inflight_work += est
+            self.queued_joules -= joules
+            self.inflight_joules += joules
 
-    def finish(self, est: float, exec_s: float, ran: bool) -> None:
+    def finish(self, est: float, exec_s: float, ran: bool,
+               joules: float = 0.0) -> None:
         with self._lock:
             self.inflight_work -= est
+            self.inflight_joules -= joules
             if ran:
                 self.busy_s += exec_s
                 self.batches_run += 1
@@ -143,6 +163,8 @@ class ExecutorLane:
                 "batches": self.batches_run,
                 "queued_work": self.queued_work,
                 "inflight_work": self.inflight_work,
+                "queued_joules": self.queued_joules,
+                "inflight_joules": self.inflight_joules,
             }
 
 
@@ -161,6 +183,10 @@ class ClusteringService:
         max_per_tenant: int = 64,
         tenant_rate: Optional[float] = None,
         tenant_burst: int = 8,
+        tenant_joule_rate: Optional[float] = None,
+        tenant_joule_burst: float = 50.0,
+        power_cap_watts: Optional[float] = None,
+        power_cap_burst_joules: Optional[float] = None,
         cache_entries: int = 256,
         cache_spill: bool = True,
         cache_ttl_s: Optional[float] = 3600.0,
@@ -201,7 +227,18 @@ class ClusteringService:
             max_per_tenant=max_per_tenant,
             tenant_rate=tenant_rate,
             tenant_burst=tenant_burst,
+            tenant_joule_rate=tenant_joule_rate,
+            tenant_joule_burst=tenant_joule_burst,
+            joule_cost=self._predict_joules,
             too_large=None if can_shard else self._req_oversized)
+        # service-wide power cap: a shared joule bucket every lane pays
+        # before running a batch, so modeled watts stay under the cap
+        # (dispatch paces; p50 stretches; batches fill — joules/point
+        # usually improves, the paper's speed/energy tradeoff as a knob)
+        self.pacer: Optional[PowerCapPacer] = (
+            PowerCapPacer(power_cap_watts,
+                          burst_joules=power_cap_burst_joules)
+            if power_cap_watts is not None else None)
         # batch-shape bucketing: how far each batch pads, and therefore how
         # many distinct executables the jit cache holds.  "adaptive" (the
         # default; see docs/bucketing_study.md) behaves exactly like the
@@ -302,6 +339,26 @@ class ClusteringService:
         return self.registry.oversized(
             req.algo, req.n_points, req.features, req.params,
             bucket=self.bucket_policy.bucket_ceiling)
+
+    def _predict_joules(self, req: MiningRequest) -> float:
+        """Price one request in predicted joules (the admission budget's
+        ``joule_cost`` hook): work estimate at the padded bucket the
+        request will execute at, priced at the energy-optimal device
+        class — the class dispatch prefers for that work size."""
+        n_pad = max(int(self.bucket_policy.bucket(req.n_points)),
+                    req.n_points)
+        work = estimate_work(req.algo, n_pad, req.features, 1, req.params)
+        return classify_work(work).modeled_joules(work)
+
+    def _batch_joules(self, name: str, est: float,
+                      hints: Dict[str, float]) -> float:
+        """Predicted joules of one batch on one lane: measured EWMA
+        joules-per-work when the paradigm has history, else its device
+        class's static model."""
+        hint = hints.get(name)
+        if hint is not None:
+            return float(hint) * est
+        return device_class_for(name).modeled_joules(est)
 
     # -- telemetry plumbing --------------------------------------------------
 
@@ -688,6 +745,7 @@ class ClusteringService:
         key = batch.key
         params = key.params_dict
         n_pad = batch.n_max
+        hints = self.metrics.energy_hints()
         try:
             # n_pad is the batch's final padded shape (the batcher already
             # applied the policy), so the budget check inside candidates
@@ -695,7 +753,7 @@ class ClusteringService:
             names = self.registry.candidates(
                 key.algo, n=n_pad, d=key.features, batch_size=batch.size,
                 params=params, explicit=key.executor,
-                energy_hints=self.metrics.energy_hints(),
+                energy_hints=hints,
                 bucket=lambda n: n)
         except Exception as e:
             # unknown executor, poisoned params, a failing cost model —
@@ -706,9 +764,17 @@ class ClusteringService:
             return
         est = estimate_work(key.algo, n_pad, key.features, batch.size,
                             params)
+        # balance on predicted joules in flight first (each lane's cost
+        # for THIS batch included, since the classes price work
+        # differently), then raw work as the tie-break — the PR 3
+        # "queue depth only" residual closed
         lane = min((self.lanes[name] for name in names
                     if name in self.lanes),
-                   key=lambda ln: ln.load, default=None)
+                   key=lambda ln: (ln.energy_load
+                                   + self._batch_joules(ln.name, est,
+                                                        hints),
+                                   ln.load),
+                   default=None)
         if lane is None:
             for req in batch.requests:
                 req.fail(RequestDropped(
@@ -734,16 +800,16 @@ class ClusteringService:
                 size=batch.size, capacity=batch.capacity,
                 n_pad=batch.n_max, oversized=batch.oversized,
                 lane=lane.name)
-        lane.put(batch, est)
+        lane.put(batch, est, self._batch_joules(lane.name, est, hints))
 
     # -- lane workers --------------------------------------------------------
 
     def _lane_loop(self, lane: ExecutorLane) -> None:
         while True:
-            _prio, _seq, batch, est = lane.batches.get()
+            _prio, _seq, batch, est, joules = lane.batches.get()
             if batch is None:
                 return
-            lane.begin(est)
+            lane.begin(est, joules)
             ran = False
             t0 = time.monotonic()
             try:
@@ -756,10 +822,23 @@ class ClusteringService:
                             f"{lane.name} when the service was preempted; "
                             f"recover() will replay it", resubmit=True))
                     continue
+                if self.pacer is not None:
+                    # the --power-cap gate: pay this batch's predicted
+                    # joules into the shared bucket before dispatching —
+                    # blocks while the service is over cap, trading p50
+                    # for modeled watts <= cap.  Shutdown aborts the wait
+                    # (the batch then runs or is failed by stop()).
+                    waited = self.pacer.acquire(
+                        joules, abort=lambda: (not self._running
+                                               or self.token.cancelled()))
+                    if waited > 0 and batch.requests[0].trace_id:
+                        self.tracer.mark(batch.requests[0].trace_id,
+                                         "power_cap_wait",
+                                         lane=lane.name, wait_s=waited)
                 ran = True
                 self._run_batch(batch, lane.name)
             finally:
-                lane.finish(est, time.monotonic() - t0, ran)
+                lane.finish(est, time.monotonic() - t0, ran, joules)
 
     def _run_batch(self, batch: MicroBatch, executor: str) -> None:
         now = time.time()
@@ -870,7 +949,8 @@ class ClusteringService:
             work=self._ewma_work(outcome),
             real_points=outcome.real_points,
             features=int((outcome.plan or {}).get("features", 0)),
-            host_s=outcome.host_s, device_s=outcome.device_s)
+            host_s=outcome.host_s, device_s=outcome.device_s,
+            device_class=str((outcome.plan or {}).get("device_class", "")))
         self._telemetry_event("batch", {
             "job_id": outcome.job_id, "algo": outcome.algo,
             "executor": outcome.executor, "size": outcome.size,
@@ -1005,7 +1085,9 @@ class ClusteringService:
                 work=self._ewma_work(outcome),
                 real_points=outcome.real_points,
                 features=int((outcome.plan or {}).get("features", 0)),
-                host_s=outcome.host_s, device_s=outcome.device_s)
+                host_s=outcome.host_s, device_s=outcome.device_s,
+                device_class=str((outcome.plan or {}).get("device_class",
+                                                          "")))
             self._telemetry_event("batch", {
                 "job_id": outcome.job_id, "algo": outcome.algo,
                 "executor": outcome.executor, "size": outcome.size,
@@ -1215,6 +1297,37 @@ class ClusteringService:
                        if up > 0 else None)
                 for name, lane in self.lanes.items()},
         })
+        # energy control surface: the metrics object supplied the modeled
+        # watts / per-class / hint views; the service adds its knobs, the
+        # power-cap pacer state, the admission-budget counters, and the
+        # per-lane predicted-joules loads (see docs/OPERATIONS.md Energy)
+        energy = dict(snap.get("energy") or {})
+        totals = snap.get("totals") or {}
+        real_pts = (snap.get("bucketing") or {}).get("real_points", 0)
+        energy.update({
+            "power_cap_watts": (self.pacer.watts
+                                if self.pacer is not None else None),
+            "cap": (self.pacer.snapshot()
+                    if self.pacer is not None else None),
+            "cap_saturation": (
+                min(1.0, energy.get("modeled_watts", 0.0)
+                    / self.pacer.watts)
+                if self.pacer is not None else 0.0),
+            "budget": {
+                "tenant_joule_rate": self.queue.tenant_joule_rate,
+                "tenant_joule_burst": self.queue.tenant_joule_burst,
+                "rejections": self.queue.energy_rejected,
+            },
+            "joules_total": totals.get("modeled_joules", 0.0),
+            "joules_per_point": (
+                totals.get("modeled_joules", 0.0) / real_pts
+                if real_pts else 0.0),
+            "lane_joules": {name: {
+                "queued": lane.stats()["queued_joules"],
+                "inflight": lane.stats()["inflight_joules"]}
+                for name, lane in self.lanes.items()},
+        })
+        snap["energy"] = energy
         snap["exec_cache"] = self.exec_cache.stats()
         snap["wal"] = self.wal.stats() if self.wal is not None else None
         ws = self.metrics.window_stats()

@@ -216,6 +216,54 @@ def render_prometheus(snapshot: Dict[str, Any], prefix: str = "repro") -> str:
             out.add(f"wal_{key}", wal[key],
                     help_text=f"Admission WAL {key}", kind=kind)
 
+    # energy -------------------------------------------------------------
+    energy = snapshot.get("energy") or {}
+    if "modeled_watts" in energy:
+        out.add("energy_modeled_watts", energy["modeled_watts"],
+                help_text="Modeled power over the trailing window")
+    if energy.get("power_cap_watts") is not None:
+        out.add("energy_power_cap_watts", energy["power_cap_watts"],
+                help_text="Configured dispatch power cap")
+        out.add("energy_cap_saturation", energy.get("cap_saturation", 0.0),
+                help_text="Modeled watts over the cap (1.0 = saturated)")
+    cap = energy.get("cap") or {}
+    for key, name, kind, help_text in (
+            ("spent_joules", "energy_cap_spent_joules_total", "counter",
+             "Joules charged through the power-cap pacer"),
+            ("throttled_s_total", "energy_cap_throttle_seconds_total",
+             "counter", "Dispatch seconds spent blocked on the power cap"),
+            ("throttles", "energy_cap_throttles_total", "counter",
+             "Batches that had to wait for the power cap"),
+            ("tokens_joules", "energy_cap_tokens_joules", "gauge",
+             "Joule tokens currently in the pacer bucket"),
+    ):
+        if key in cap:
+            out.add(name, cap[key], help_text=help_text, kind=kind)
+    budget = energy.get("budget") or {}
+    if "rejections" in budget:
+        out.add("energy_budget_rejections_total", budget["rejections"],
+                help_text="Admissions bounced by a tenant joule budget",
+                kind="counter")
+    if "joules_total" in energy:
+        out.add("energy_joules_total", energy["joules_total"],
+                help_text="Modeled joules across all batches",
+                kind="counter")
+    if "joules_per_point" in energy:
+        out.add("energy_joules_per_point", energy["joules_per_point"],
+                help_text="Modeled joules per real (unpadded) point")
+    for cls, tot in sorted((energy.get("by_class") or {}).items()):
+        lab = {"device_class": cls}
+        for key, name, kind in (
+                ("batches", "energy_class_batches_total", "counter"),
+                ("exec_s", "energy_class_exec_seconds_total", "counter"),
+                ("modeled_joules", "energy_class_joules_total", "counter"),
+                ("joules_per_point", "energy_class_joules_per_point",
+                 "gauge"),
+        ):
+            if isinstance(tot, dict) and key in tot:
+                out.add(name, tot[key], labels=lab,
+                        help_text=f"Per-device-class {key}", kind=kind)
+
     # SLO ----------------------------------------------------------------
     slo = snapshot.get("slo") or {}
     if slo:

@@ -33,7 +33,8 @@ from repro.service import (
     default_registry,
 )
 from repro.service.dispatch import NumpyMTParadigm, estimate_item_bytes
-from repro.service.metrics import ServiceMetrics
+from repro.service.energy import BIG
+from repro.service.metrics import HINT_STALENESS_DECAY, ServiceMetrics
 
 DB_CFG = dbscan.DBSCANConfig.paper_defaults(2)
 DB_PARAMS = {"eps": DB_CFG.eps, "min_pts": DB_CFG.min_pts}
@@ -397,18 +398,22 @@ def test_metrics_energy_ewma_feeds_hints():
     m.record_batch(algo="kmeans", executor="jax-ref", size=1, capacity=1,
                    n_max=64, exec_s=2.0, work=1e6)
     hints = m.energy_hints()
-    assert hints["jax-ref"] == pytest.approx(6.0 / 1e6)   # 3 W x 2 s / work
+    assert hints["jax-ref"] == pytest.approx(15.0 / 1e6)  # big: 7.5 W x 2 s / work
     # EWMA: a second, slower batch moves the estimate toward it, partially
     m.record_batch(algo="kmeans", executor="jax-ref", size=1, capacity=1,
                    n_max=64, exec_s=4.0, work=1e6)
     updated = m.energy_hints()["jax-ref"]
-    assert hints["jax-ref"] < updated < 12.0 / 1e6
+    assert hints["jax-ref"] < updated < 30.0 / 1e6
     # zero-work batches (no plan) never poison the estimate
     m.record_batch(algo="kmeans", executor="numpy-mt", size=1, capacity=1,
                    n_max=64, exec_s=1.0)
     assert "numpy-mt" not in m.energy_hints()
+    # …but it does age the jax-ref hint by one batch: the snapshot reads
+    # it decayed one step toward the big-class static prior
+    prior = BIG.joules_per_work
+    decayed = prior + (updated - prior) * (1.0 - HINT_STALENESS_DECAY)
     assert m.snapshot()["joules_per_work"]["jax-ref"] == pytest.approx(
-        updated)
+        decayed)
 
 
 # -- result-cache disk spill ---------------------------------------------------

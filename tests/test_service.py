@@ -207,7 +207,7 @@ def test_metrics_percentiles_and_occupancy():
                      latency_s=0.5)
     snap = m.snapshot()
     assert snap["mean_occupancy"] == 0.75
-    assert snap["modeled_joules"] == pytest.approx(6.0)   # 3 W x 2 s
+    assert snap["modeled_joules"] == pytest.approx(15.0)  # big class: 7.5 W x 2 s
     assert snap["by_executor"]["jax-ref"]["p50_latency_s"] == 0.5
 
 
