@@ -1115,6 +1115,269 @@ def run_energy_gate(smoke: bool = False) -> Dict:
     }
 
 
+# -- zero-downtime standby gate -----------------------------------------------
+
+
+def _standby_child(workdir: str, n: int, port: int) -> None:
+    """Gate child: admit N requests durably while shipping the WAL to a
+    standby at ``port``, signal readiness, then hang until SIGKILLed.
+
+    Tuned so nothing ever batches (the admission-to-batching window the
+    WAL protects); the shipper runs on a tight cadence so the standby
+    converges while the child is still alive.
+    """
+    from repro.service import ClusteringService, MiningClient
+    from repro.service.replicate import WalShipper
+
+    service = ClusteringService(workdir, max_batch=64, max_wait_s=3600.0)
+    client = MiningClient(service=service)
+    service.start()
+    shipper = WalShipper(service.wal, "127.0.0.1", port,
+                         interval=0.02).start()
+    service.attach_replicator(shipper)
+    for tenant, algo, data, params in _build_gate_workload(n):
+        client.submit(tenant, algo, data, params=params, executor="jax-ref")
+    with open(os.path.join(workdir, "ADMITTED"), "w") as f:
+        f.write(str(n))
+    time.sleep(600)          # parent kills us long before this expires
+
+
+def run_standby_gate(smoke: bool = False) -> Dict:
+    """Zero-downtime gate: warm-standby promotion + fleet rolling restart.
+
+    Phase 1 — promotion.  A child process admits N durable requests while
+    a :class:`WalShipper` mirrors its WAL to a parent-hosted
+    :class:`StandbyReplica` under live load.  Once the standby reports
+    zero lag the child is SIGKILLed — primary and workdir both "lost" —
+    and the standby is promoted.  Every admitted request must resolve
+    through the promoted service's replay with labels identical to an
+    uninterrupted reference (per content hash), the replica's
+    ``repro_replica_*`` exposition must validate, and a live config
+    reload on the promoted service must land at a fresh epoch in both
+    the snapshot and the exposition.
+
+    Phase 2 — rolling restart.  A 2-worker fleet serves durably-admitted
+    requests while ``WorkerManager.rolling_restart()`` drains and
+    respawns every worker one at a time; all handles must resolve with
+    reference-identical labels, every worker pid must change, and a
+    fleet-wide ``/reload`` must converge on one epoch on every worker.
+    """
+    import urllib.request
+
+    import numpy as np
+
+    from repro.service import (
+        ClusteringService,
+        MiningClient,
+        StandbyReplica,
+        content_key,
+        exposition_errors,
+    )
+    from repro.service.fleet import FleetRouter, WorkerManager
+    from repro.service.telemetry import render_prometheus
+
+    n = 4 if smoke else 8
+    workload = _build_gate_workload(n)
+    problems: List[str] = []
+
+    # uninterrupted reference run (separate workdir): labels per hash
+    refdir = tempfile.mkdtemp(prefix="svc_standby_ref_")
+    ref_labels: Dict[str, "np.ndarray"] = {}
+    try:
+        service = ClusteringService(refdir, max_batch=4, max_wait_s=0.005)
+        client = MiningClient(service=service)
+        with service:
+            handles = [
+                client.submit(tenant, algo, data, params=params,
+                              executor="jax-ref")
+                for tenant, algo, data, params in workload
+            ]
+            for (tenant, algo, data, params), h in zip(workload, handles):
+                ref_labels[content_key(algo, params,
+                                       np.asarray(data, np.float32))] = (
+                    h.result(300)["labels"])
+    finally:
+        shutil.rmtree(refdir, ignore_errors=True)
+
+    # -- phase 1: ship under live load, SIGKILL, promote -----------------------
+    primary_dir = tempfile.mkdtemp(prefix="svc_standby_primary_")
+    standby_dir = tempfile.mkdtemp(prefix="svc_standby_mirror_")
+    standby = StandbyReplica(standby_dir).start()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", ""))
+    lag_at_kill = None
+    try:
+        proc = subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__),
+             "--standby-child", primary_dir, str(n), str(standby.port)],
+            env=env)
+        marker = os.path.join(primary_dir, "ADMITTED")
+        deadline = time.time() + 180
+        try:
+            while not os.path.exists(marker):
+                if proc.poll() is not None:
+                    raise RuntimeError(
+                        f"gate child exited early (rc={proc.returncode})")
+                if time.time() > deadline:
+                    raise RuntimeError("gate child never admitted")
+                time.sleep(0.05)
+            # the standby must converge while the primary still lives
+            while time.time() < deadline:
+                snap = standby.stats()
+                if (snap["pending_entries"] >= n
+                        and snap["lag_entries"] == 0):
+                    break
+                time.sleep(0.05)
+            lag_at_kill = standby.stats()["lag_entries"]
+        finally:
+            if proc.poll() is None:
+                proc.send_signal(signal.SIGKILL)
+            proc.wait(30)
+        if lag_at_kill != 0:
+            problems.append(
+                f"standby never caught up before the kill "
+                f"(lag {lag_at_kill} entries)")
+
+        # the replica exposition must validate while it is still a standby
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{standby.port}/metrics",
+                timeout=30) as resp:
+            replica_text = resp.read().decode("utf-8")
+        problems += [f"replica exposition: {e}"
+                     for e in exposition_errors(replica_text)]
+        for needle in ("repro_replica_lag_entries",
+                       "repro_replica_pending_entries",
+                       "repro_replica_applies_total",
+                       "repro_replica_ok 1"):
+            if needle not in replica_text:
+                problems.append(f"missing replica series: {needle}")
+
+        svc, summary = standby.promote(max_batch=4, max_wait_s=0.005)
+        produced: Dict[str, "np.ndarray"] = {}
+        try:
+            for r in summary["requests"]:
+                try:
+                    produced[r.cache_key] = r.wait(300)["labels"]
+                except Exception as e:
+                    print(f"# promoted replay {r.request_id} failed: "
+                          f"{e!r}", file=sys.stderr)
+            promoted_pending = (svc.wal.pending()
+                                if svc.wal is not None else -1)
+            # live reload on the promoted service: the epoch must move
+            # and be visible in snapshot AND exposition (stale = fail)
+            svc.apply_config({"tenant_rate": 50.0})
+            msnap = svc.metrics_snapshot()
+            if msnap["config"]["epoch"] != 1:
+                problems.append(
+                    f"stale config epoch after reload: snapshot says "
+                    f"{msnap['config']['epoch']}, expected 1")
+            if "repro_config_epoch 1" not in render_prometheus(msnap):
+                problems.append(
+                    "stale config epoch after reload: exposition still "
+                    "lacks repro_config_epoch 1")
+        finally:
+            svc.stop(drain=True)
+        lost = mismatched = 0
+        for ck, ref in ref_labels.items():
+            got = produced.get(ck)
+            if got is None:
+                lost += 1
+            elif not (got == ref).all():
+                mismatched += 1
+        if promoted_pending:
+            problems.append(f"promoted WAL still has {promoted_pending} "
+                            f"pending admits")
+    finally:
+        standby.stop()
+        shutil.rmtree(primary_dir, ignore_errors=True)
+        shutil.rmtree(standby_dir, ignore_errors=True)
+
+    # -- phase 2: fleet rolling restart under durable load ---------------------
+    root = tempfile.mkdtemp(prefix="svc_standby_fleet_")
+    manager = WorkerManager(
+        root, 2, worker_config={"max_batch": 4, "max_wait_s": 0.05},
+        heartbeat_interval=0.25)
+    manager.start()
+    router = FleetRouter(manager)
+    roll_lost = roll_mismatched = 0
+    restarted_pids = {}
+    reload_epochs = {}
+    try:
+        # fleet-wide live reload first: every worker must land on epoch 1
+        reload_result = router.reload({"tenant_rate": 77.0})
+        reload_epochs = reload_result["epochs"]
+        if not reload_result["converged"]:
+            problems.append(
+                f"fleet reload did not converge: epochs "
+                f"{reload_result['epochs']}, errors "
+                f"{reload_result['errors']}")
+        elif set(reload_result["epochs"].values()) != {1}:
+            problems.append(
+                f"stale config epoch after fleet reload: "
+                f"{reload_result['epochs']}")
+
+        before_pids = {name: spec.proc.pid
+                       for name, spec in manager.workers.items()}
+        handles = []
+        for i, (tenant, algo, data, params) in enumerate(workload):
+            h = router.submit(tenant, algo, data, params=params,
+                              executor="jax-ref", durable=True)
+            h.admitted(60)
+            handles.append(h)
+
+        manager.rolling_restart(drain_timeout=60.0)
+
+        for (tenant, algo, data, params), h in zip(workload, handles):
+            key = content_key(algo, params, np.asarray(data, np.float32))
+            try:
+                got = h.result(300)["labels"]
+            except Exception as e:
+                print(f"# rolled request {tenant} failed: {e!r}",
+                      file=sys.stderr)
+                roll_lost += 1
+                continue
+            if not (got == ref_labels[key]).all():
+                roll_mismatched += 1
+
+        restarted_pids = {name: spec.proc.pid
+                          for name, spec in manager.workers.items()}
+        stuck = [name for name, pid in restarted_pids.items()
+                 if before_pids.get(name) == pid]
+        if stuck:
+            problems.append(f"rolling restart left old pids: {stuck}")
+        if len(manager.restarts) != len(before_pids):
+            problems.append(
+                f"expected {len(before_pids)} restart records, got "
+                f"{len(manager.restarts)}")
+        # the upgraded fleet still serves
+        tenant, algo, data, params = workload[0]
+        post = router.submit(tenant, algo, data,
+                             params=dict(params, seed=9999),
+                             executor="jax-ref")
+        post.result(300)
+    finally:
+        router.close()
+        manager.stop()
+        shutil.rmtree(root, ignore_errors=True)
+
+    return {
+        "admitted": n,
+        "replayed": summary["replayed"],
+        "lost": lost,
+        "mismatched": mismatched,
+        "lag_at_kill": lag_at_kill,
+        "promoted_pending": promoted_pending,
+        "reload_epochs": reload_epochs,
+        "rolled": len(workload),
+        "roll_lost": roll_lost,
+        "roll_mismatched": roll_mismatched,
+        "restarts": len(restarted_pids),
+        "problems": problems,
+    }
+
+
 def build_parser() -> argparse.ArgumentParser:
     """The CLI surface (separate so the docs gate can introspect it)."""
     ap = argparse.ArgumentParser()
@@ -1168,7 +1431,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "over-budget tenant is rejected with a valid "
                          "retry_after, and the repro_energy_* exposition "
                          "validates")
+    ap.add_argument("--standby-gate", action="store_true",
+                    help="run ONLY the zero-downtime gate: ship the WAL "
+                         "to a warm standby under live load, SIGKILL the "
+                         "primary, promote the standby, and roll-restart "
+                         "a 2-worker fleet holding durable admits; exit "
+                         "nonzero on any lost admitted request (per "
+                         "content hash), a stale config epoch after a "
+                         "live reload, or an invalid repro_replica_* "
+                         "exposition")
     ap.add_argument("--recover-child", nargs=2, metavar=("WORKDIR", "N"),
+                    help=argparse.SUPPRESS)   # internal: gate child mode
+    ap.add_argument("--standby-child", nargs=3,
+                    metavar=("WORKDIR", "N", "PORT"),
                     help=argparse.SUPPRESS)   # internal: gate child mode
     return ap
 
@@ -1178,6 +1453,32 @@ def main() -> None:
 
     if args.recover_child:
         _recover_child(args.recover_child[0], int(args.recover_child[1]))
+        return
+    if args.standby_child:
+        _standby_child(args.standby_child[0], int(args.standby_child[1]),
+                       int(args.standby_child[2]))
+        return
+    if args.standby_gate:
+        gate = run_standby_gate(smoke=args.smoke)
+        print(f"# standby gate: {gate['admitted']} admitted, lag at kill "
+              f"{gate['lag_at_kill']}, {gate['replayed']} replayed by the "
+              f"promoted standby, {gate['lost']} lost, "
+              f"{gate['mismatched']} mismatched; rolling restart: "
+              f"{gate['rolled']} in flight across {gate['restarts']} "
+              f"worker restarts, {gate['roll_lost']} lost, "
+              f"{gate['roll_mismatched']} mismatched, reload epochs "
+              f"{gate['reload_epochs']}")
+        if (gate["lost"] or gate["mismatched"] or gate["roll_lost"]
+                or gate["roll_mismatched"] or gate["problems"]):
+            for p in gate["problems"]:
+                print(f"# FAIL: {p}", file=sys.stderr)
+            if (gate["lost"] or gate["mismatched"] or gate["roll_lost"]
+                    or gate["roll_mismatched"]):
+                print("# FAIL: zero-downtime path lost or corrupted "
+                      "admitted requests", file=sys.stderr)
+            sys.exit(1)
+        print("# zero-downtime: promotion and rolling restart lost zero "
+              "admitted requests; config epochs converged")
         return
     if args.recover_gate:
         gate = run_recover_gate(smoke=args.smoke)

@@ -229,6 +229,26 @@ def build_parser() -> argparse.ArgumentParser:
                          "exposition (repro_fleet_* with a worker label; "
                          "also /snapshot and cross-worker /trace) on this "
                          "port; 0 binds an ephemeral port and prints it")
+    ap.add_argument("--standby", default=None, metavar="HOST:PORT",
+                    help="ship the write-ahead admission log to a warm "
+                         "StandbyReplica listening at this address for the "
+                         "whole run, so a lost workdir can be promoted "
+                         "without losing an admitted request "
+                         "(single-process mode; see the zero-downtime "
+                         "chapter in docs/OPERATIONS.md)")
+    ap.add_argument("--reload", default=None, metavar="JSON",
+                    help="apply a live config reload before driving load: "
+                         "a JSON object of reloadable knobs, e.g. "
+                         "'{\"tenant_rate\": 50}' — fanned to every "
+                         "worker's POST /reload with --fleet, applied "
+                         "in-process otherwise; the bumped config epoch "
+                         "is printed and stamped into traces and metrics")
+    ap.add_argument("--rolling-restart", action="store_true",
+                    help="with --fleet: after the workload drains, restart "
+                         "every worker one at a time (drain, respawn over "
+                         "the same workdir, re-pin the router) and drive a "
+                         "verification batch — the zero-downtime upgrade "
+                         "path")
     return ap
 
 
@@ -263,6 +283,12 @@ def run_fleet(args) -> None:
             exporter = router.serve_metrics(args.router_port)
             print(f"# fleet telemetry: "
                   f"http://127.0.0.1:{exporter.port}/metrics")
+        if args.reload:
+            changes = json.loads(args.reload)
+            result = router.reload(changes)
+            print(f"# reload: epochs {result['epochs']}, "
+                  f"converged {result['converged']}, "
+                  f"errors {result['errors']}")
         workload = build_workload(
             args.requests, args.tenants, args.algo,
             features=args.features, clusters=args.clusters,
@@ -271,6 +297,19 @@ def run_fleet(args) -> None:
         executor = None if args.executor == "auto" else args.executor
         failures = drive(router, workload, args.rate, executor,
                          ttl=args.ttl)
+        if args.rolling_restart:
+            manager.rolling_restart()
+            for r in manager.restarts:
+                print(f"# rolling restart: {r['worker']} "
+                      f"pid {r['old_pid']} -> {r['new_pid']} "
+                      f"in {r['duration_s']:.2f}s")
+            # the upgraded fleet must still serve
+            verify = build_workload(min(args.requests, 8), args.tenants,
+                                    args.algo, features=args.features,
+                                    clusters=args.clusters,
+                                    points=args.points, seed=1)
+            post = drive(router, verify, args.rate, executor, ttl=args.ttl)
+            print(f"# rolling restart: post-restart batch failures {post}")
         snap = router.metrics_snapshot()
         fleet = snap["fleet"]
         print(json.dumps(fleet, indent=2, default=str))
@@ -291,7 +330,15 @@ def run_fleet(args) -> None:
 
 
 def main() -> None:
-    args = build_parser().parse_args()
+    parser = build_parser()
+    args = parser.parse_args()
+    if args.standby and args.fleet:
+        parser.error("--standby is single-process mode only: each fleet "
+                     "worker needs its own standby (see "
+                     "WorkerManager(standbys=...))")
+    if args.rolling_restart and not args.fleet:
+        parser.error("--rolling-restart needs --fleet N (the in-process "
+                     "equivalent is ClusteringService.handover())")
     if args.fleet:
         run_fleet(args)
         return
@@ -314,6 +361,15 @@ def main() -> None:
         tenant_joule_burst=args.joule_burst,
     )
     client = MiningClient(service=service)
+    shipper = None
+    if args.standby:
+        from repro.service.replicate import WalShipper
+
+        s_host, _, s_port = args.standby.rpartition(":")
+        shipper = WalShipper(service.wal, s_host or "127.0.0.1",
+                             int(s_port)).start()
+        service.attach_replicator(shipper)
+        print(f"# replicating WAL to standby {args.standby}")
     exporter = None
     if args.metrics_port is not None:
         exporter = TelemetryServer(service.metrics_snapshot,
@@ -352,7 +408,17 @@ def main() -> None:
                     h.result(300)
                 except Exception as e:
                     print(f"replayed request {h.request_id} failed: {e!r}")
+        if args.reload:
+            cfg = service.apply_config(json.loads(args.reload))
+            print(f"# reload: epoch {cfg.epoch} applied")
         failures = drive(client, workload, args.rate, executor, ttl=args.ttl)
+    if shipper is not None:
+        shipper.stop(final_ship=True)
+        st = shipper.stats()
+        print(f"# standby: {st['bytes_shipped']} bytes shipped in "
+              f"{st['chunks_shipped']} chunks, "
+              f"lag {st['standby_lag_entries']} entries, "
+              f"{st['ship_errors']} ship errors")
     if exporter is not None:
         exporter.stop()
     if args.trace_dump:

@@ -42,6 +42,12 @@ estimates are decided (and persisted) before any data moves.
                 to delivery, surviving SIGKILL via the event log
     telemetry — Prometheus exposition + HTTP exporter, rotating JSONL
                 event log, SLO burn-rate evaluation
+    config    — versioned ServiceConfig: the live-reload control surface
+                (validate-before-apply, config_epoch observability)
+    replicate — warm-standby WAL replication: segment shipper + standby
+                replica that can promote into a live service
+    faults    — deterministic fault-injection points (REPRO_FAULT) the
+                crash-matrix tests drive
     service   — the engine tying it together (executor lane pool)
     fleet     — the horizontal tier: N worker processes behind a
                 consistent-hash router, heartbeat-supervised, with
@@ -58,6 +64,7 @@ from repro.service.bucketing import (
 )
 from repro.service.cache import ResultCache, content_key
 from repro.service.client import MiningClient, ResultHandle
+from repro.service.config import RELOADABLE_FIELDS, ServiceConfig
 from repro.service.dispatch import (
     EXECUTOR_DISTRIBUTED,
     EXECUTOR_JAX_REF,
@@ -75,6 +82,7 @@ from repro.service.energy import (
     device_class_for,
 )
 from repro.service.executor import BatchExecutor, BatchOutcome
+from repro.service.faults import FaultInjected, FaultPlan, parse_spec
 from repro.service.metrics import ServiceMetrics
 from repro.service.queue import (
     PRIORITY_BATCH,
@@ -107,6 +115,7 @@ from repro.service.trace import (
     new_trace_id,
     read_spans,
 )
+from repro.service.replicate import StandbyReplica, WalShipper
 from repro.service.wal import RequestLog, WalLocked, WalRecord
 from repro.service.fleet import (
     ConsistentHashRing,
@@ -141,6 +150,13 @@ __all__ = [
     "PowerCapPacer",
     "device_class_for",
     "EventLog",
+    "FaultInjected",
+    "FaultPlan",
+    "RELOADABLE_FIELDS",
+    "ServiceConfig",
+    "StandbyReplica",
+    "WalShipper",
+    "parse_spec",
     "EXECUTOR_DISTRIBUTED",
     "EXECUTOR_JAX_REF",
     "EXECUTOR_NUMPY_MT",

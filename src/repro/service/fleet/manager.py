@@ -58,6 +58,7 @@ class WorkerSpec:
         self.last_ok = 0.0
         self.health: Dict[str, Any] = {}
         self.adopter: Optional[str] = None   # who took over our WAL
+        self.restarting = False              # mid rolling-restart: not dead
 
     @property
     def wal_root(self) -> str:
@@ -67,6 +68,7 @@ class WorkerSpec:
         return {"name": self.name, "workdir": self.workdir,
                 "host": self.host, "port": self.port, "pid": self.pid,
                 "alive": self.alive, "adopter": self.adopter,
+                "restarting": self.restarting,
                 "health": dict(self.health)}
 
 
@@ -96,7 +98,10 @@ class WorkerManager:
                  heartbeat_interval: float = 0.5,
                  miss_deadline: Optional[float] = None,
                  replay_rate: Optional[float] = None,
-                 spawn_timeout: float = 30.0) -> None:
+                 spawn_timeout: float = 30.0,
+                 fault_specs: Optional[Dict[str, str]] = None,
+                 fault_ledger: Optional[str] = None,
+                 standbys: Optional[Dict[str, str]] = None) -> None:
         if n_workers < 1:
             raise ValueError("a fleet needs at least one worker")
         self.root = root
@@ -108,9 +113,16 @@ class WorkerManager:
                               is not None else 6 * self.heartbeat_interval)
         self.replay_rate = replay_rate
         self.spawn_timeout = float(spawn_timeout)
+        # crash-matrix support: arm one worker's REPRO_FAULT without
+        # leaking the parent process's own spec into every child
+        self.fault_specs = dict(fault_specs or {})
+        self.fault_ledger = fault_ledger
+        self.standbys = dict(standbys or {})   # name -> "host:port"
         self.workers: Dict[str, WorkerSpec] = {}
         self.takeovers: List[Dict[str, Any]] = []
+        self.restarts: List[Dict[str, Any]] = []
         self._subscribers: List[Callable[[str, Optional[str]], None]] = []
+        self._restart_subs: List[Callable[[str, str], None]] = []
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -131,6 +143,19 @@ class WorkerManager:
             except Exception:
                 logger.exception("fleet death subscriber raised")
 
+    def on_restart(self, fn: Callable[[str, str], None]) -> None:
+        """Subscribe ``fn(worker_name, phase)`` to rolling-restart
+        lifecycle events; ``phase`` is ``"drain"`` (stop routing new work
+        to this worker) or ``"restored"`` (successor is live)."""
+        self._restart_subs.append(fn)
+
+    def _announce_restart(self, name: str, phase: str) -> None:
+        for fn in list(self._restart_subs):
+            try:
+                fn(name, phase)
+            except Exception:
+                logger.exception("fleet restart subscriber raised")
+
     # -- spawn ---------------------------------------------------------------
 
     def _spawn(self, name: str) -> WorkerSpec:
@@ -145,11 +170,22 @@ class WorkerManager:
         cfg.update(self.overrides.get(name, {}))
         env = dict(os.environ)
         env["PYTHONPATH"] = _src_pythonpath()
+        env.pop("REPRO_FAULT", None)
+        env.pop("REPRO_FAULT_LEDGER", None)
+        if name in self.fault_specs:
+            env["REPRO_FAULT"] = self.fault_specs[name]
+            if self.fault_ledger is not None:
+                env["REPRO_FAULT_LEDGER"] = self.fault_ledger
+        argv = [sys.executable, "-m", "repro.service.fleet.worker",
+                "--workdir", spec.workdir, "--announce", announce,
+                "--name", name, "--config", json.dumps(cfg)]
+        if name in self.standbys:
+            argv += ["--standby", self.standbys[name]]
+        if self.replay_rate is not None:
+            argv += ["--replay-rate", str(self.replay_rate)]
         spec.proc = subprocess.Popen(
-            [sys.executable, "-m", "repro.service.fleet.worker",
-             "--workdir", spec.workdir, "--announce", announce,
-             "--name", name, "--config", json.dumps(cfg)],
-            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+            argv, env=env, stdout=subprocess.DEVNULL,
+            stderr=subprocess.DEVNULL)
         deadline = time.monotonic() + self.spawn_timeout
         while time.monotonic() < deadline:
             if spec.proc.poll() is not None:
@@ -199,7 +235,7 @@ class WorkerManager:
     def _heartbeat_loop(self) -> None:
         while not self._stop.wait(self.heartbeat_interval):
             for spec in list(self.workers.values()):
-                if not spec.alive:
+                if not spec.alive or spec.restarting:
                     continue
                 # an exited process is dead without waiting out a timeout
                 if spec.proc is not None and spec.proc.poll() is not None:
@@ -229,7 +265,9 @@ class WorkerManager:
 
     def _declare_dead(self, spec: WorkerSpec, *, reason: str) -> None:
         with self._lock:
-            if not spec.alive:
+            # a restarting worker's planned exit is not a death — the
+            # rolling restart owns its lifecycle and spawns the successor
+            if not spec.alive or spec.restarting:
                 return
             spec.alive = False
         # the lock must actually be free before a survivor can adopt the
@@ -292,6 +330,57 @@ class WorkerManager:
         self._kill(spec)
         self._declare_dead(spec, reason="killed by operator")
 
+    def rolling_restart(self, *, drain_timeout: float = 30.0
+                        ) -> List[Dict[str, Any]]:
+        """Restart the whole fleet one worker at a time, losing nothing.
+
+        Per worker: announce ``drain`` (the router stops placing new work
+        there), SIGTERM (the worker finishes in-flight requests, consumes
+        their WAL entries, and releases its lock), wait for a clean exit,
+        spawn a successor over the *same* workdir (its startup
+        ``recover()`` replays any unconsumed admitted tail), then
+        announce ``restored``.  At least ``n_workers - 1`` workers serve
+        at every instant, so admitted requests are never lost and new
+        submits only ever see retryable backpressure.
+        """
+        summary: List[Dict[str, Any]] = []
+        for name in sorted(self.workers):
+            spec = self.workers[name]
+            if not spec.alive:
+                continue
+            old_pid = spec.pid
+            spec.restarting = True
+            self._announce_restart(name, "drain")
+            t0 = time.monotonic()
+            try:
+                if spec.proc is not None and spec.proc.poll() is None:
+                    try:
+                        spec.proc.send_signal(signal.SIGTERM)
+                    except OSError:
+                        pass
+                    try:
+                        spec.proc.wait(timeout=drain_timeout)
+                    except subprocess.TimeoutExpired:
+                        logger.error("fleet worker %s did not drain in "
+                                     "%.0fs; killing", name, drain_timeout)
+                        self._kill(spec)
+                        spec.proc.wait(timeout=10)
+                successor = self._spawn(name)
+                with self._lock:
+                    self.workers[name] = successor
+            except Exception:
+                spec.restarting = False
+                raise
+            self._announce_restart(name, "restored")
+            record = {"worker": name, "old_pid": old_pid,
+                      "new_pid": successor.pid,
+                      "duration_s": time.monotonic() - t0}
+            self.restarts.append(record)
+            summary.append(record)
+            logger.info("fleet worker %s restarted: pid %s -> %s",
+                        name, old_pid, successor.pid)
+        return summary
+
     def fleet_snapshot(self) -> Dict[str, Any]:
         with self._lock:
             workers = {n: s.as_dict() for n, s in self.workers.items()}
@@ -302,6 +391,7 @@ class WorkerManager:
             "alive": alive,
             "dead": len(workers) - alive,
             "takeovers": [dict(t) for t in self.takeovers],
+            "restarts": [dict(r) for r in self.restarts],
         }
 
     def stop(self, drain: bool = True, timeout: float = 30.0) -> None:

@@ -205,10 +205,15 @@ class FleetRouter:
         self._sticky: Dict[str, str] = {}          # tenant -> worker name
         self.counters = {"submitted": 0, "completed": 0, "retries": 0,
                          "spills": 0, "rejected": 0, "reroutes": 0,
-                         "result_fetches": 0}
+                         "result_fetches": 0, "restart_drains": 0,
+                         "restart_restores": 0, "reloads": 0}
         self._pool = ThreadPoolExecutor(
             max_workers=pool_size, thread_name_prefix="fleet-router")
         manager.on_death(self._on_death)
+        # rolling-restart lifecycle (older/stub managers may not have it)
+        on_restart = getattr(manager, "on_restart", None)
+        if on_restart is not None:
+            on_restart(self._on_restart)
 
     # -- membership ----------------------------------------------------------
 
@@ -226,6 +231,22 @@ class FleetRouter:
                 else:
                     del self._sticky[tenant]
             self.counters["reroutes"] += len(moved)
+
+    def _on_restart(self, name: str, phase: str) -> None:
+        """Rolling restart: drop the draining worker from the ring so new
+        placements flow to its peers, then re-add the successor.  Sticky
+        pins are left in place — the successor owns the same workdir, so
+        the pin resumes the moment the worker is restored (while drained,
+        ``place()`` falls through to ring placement over the peers)."""
+        with self._lock:
+            if phase == "drain":
+                self.ring.remove(name)
+                self._suspect_until.pop(name, None)
+                self.counters["restart_drains"] += 1
+            elif phase == "restored":
+                if name not in self.ring:
+                    self.ring.add(name)
+                self.counters["restart_restores"] += 1
 
     def _mark_suspect(self, name: str) -> None:
         with self._lock:
@@ -443,6 +464,36 @@ class FleetRouter:
             return rpc.decode_result(raw)
         raise rpc.RpcError(
             f"stream op {op!r} for {tenant}/{name} exhausted retries")
+
+    # -- live reload ---------------------------------------------------------
+
+    def reload(self, changes: Dict[str, Any]) -> Dict[str, Any]:
+        """Fan a config reload out to every live worker.
+
+        Each worker validates the whole candidate config before applying
+        (see ``ClusteringService.apply_config``), so a bad knob value is
+        rejected everywhere rather than applied somewhere.  Returns the
+        per-worker epochs; ``converged`` is True when every live worker
+        accepted and reports the same (new) epoch.
+        """
+        epochs: Dict[str, int] = {}
+        errors: Dict[str, str] = {}
+        for spec in self.manager.live_workers():
+            try:
+                out = rpc.post_json(spec.host, spec.port, "/reload",
+                                    {"changes": dict(changes)},
+                                    timeout=30.0)
+                epochs[spec.name] = int(out["epoch"])
+            except Exception as exc:
+                errors[spec.name] = repr(exc)
+        with self._lock:
+            self.counters["reloads"] += 1
+        return {
+            "epochs": epochs,
+            "errors": errors,
+            "converged": (not errors and len(set(epochs.values())) <= 1
+                          and bool(epochs)),
+        }
 
     # -- observability -------------------------------------------------------
 

@@ -152,7 +152,18 @@ class FleetWorker:
                 "power_cap_watts"),
             "cap_saturation": (snap.get("energy") or {}).get(
                 "cap_saturation", 0.0),
+            # live-reload proof: a fleet-wide reload is verified by
+            # watching every worker's epoch converge on the new value
+            "config_epoch": svc.config_epoch,
         }
+
+    def _handle_reload(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        """Apply a live config reload; validation errors map to HTTP 400
+        via the normal typed-error path (ValueError)."""
+        changes = dict(body.get("changes") or {})
+        cfg = self.service.apply_config(changes)
+        return {"worker": self.name, "epoch": cfg.epoch,
+                "config": cfg.as_dict()}
 
     def _handle_takeover(self, body: Dict[str, Any]) -> Dict[str, Any]:
         summary = self.service.replay_foreign(
@@ -259,6 +270,9 @@ class FleetWorker:
                     elif url.path == "/takeover":
                         body = json.loads(self._body().decode() or "{}")
                         self._send_json(200, outer._handle_takeover(body))
+                    elif url.path == "/reload":
+                        body = json.loads(self._body().decode() or "{}")
+                        self._send_json(200, outer._handle_reload(body))
                     elif url.path == "/stream":
                         self._reply(outer._handle_stream(self._body()))
                     else:
@@ -359,6 +373,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="bind port (0 = ephemeral)")
     p.add_argument("--config", default="{}",
                    help="JSON object of ClusteringService kwargs")
+    p.add_argument("--standby", default=None, metavar="HOST:PORT",
+                   help="ship WAL segments to a warm standby replica at "
+                        "this address")
+    p.add_argument("--replay-rate", type=float, default=None,
+                   help="rate-shape startup WAL replay (requests/s)")
     return p
 
 
@@ -366,6 +385,17 @@ def main(argv: Optional[list] = None) -> int:
     args = build_parser().parse_args(argv)
     cfg = json.loads(args.config)
     service = ClusteringService(args.workdir, **cfg).start()
+    # A rolling-restart successor inherits its predecessor's workdir; any
+    # unconsumed WAL tail (admitted but never batched) replays here.  On a
+    # fresh workdir this is a no-op.
+    service.recover(replay_rate=args.replay_rate)
+    shipper = None
+    if args.standby and service.wal is not None:
+        from repro.service.replicate import WalShipper
+        s_host, _, s_port = args.standby.rpartition(":")
+        shipper = WalShipper(service.wal, s_host or "127.0.0.1",
+                             int(s_port)).start()
+        service.attach_replicator(shipper)
     worker = FleetWorker(service, name=args.name,
                          host=args.host, port=args.port).start()
     _write_announce(args.announce, {
@@ -381,6 +411,8 @@ def main(argv: Optional[list] = None) -> int:
     # SIGKILL path never gets here — that's what failover is for.
     worker.stop()
     service.stop(drain=True)
+    if shipper is not None:
+        shipper.stop(final_ship=True)
     return 0
 
 

@@ -208,6 +208,9 @@ class MiningRequest:
     cache_key: Optional[str] = None
     job_id: Optional[int] = None
     wal_id: Optional[int] = None   # admission-log entry backing this request
+    # joules actually charged against the tenant's energy budget at
+    # admission — what a cancel/failure refund credits back
+    joules_charged: float = 0.0
     _done: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False)
     _result: Optional[Dict[str, Any]] = dataclasses.field(
@@ -390,6 +393,8 @@ class AdmissionQueue:
         self._joule_buckets: Dict[str, List[float]] = {}
         self.rate_limited = 0
         self.energy_rejected = 0
+        self.energy_refunds = 0
+        self.refunded_joules = 0.0
         self.too_large_rejected = 0
         self._lock = threading.Lock()
         # priority -> (OrderedDict keeps a stable tenant rotation order:
@@ -529,6 +534,36 @@ class AdmissionQueue:
             logger.exception("joule_cost hook raised; admitting unpriced")
             return 0.0
 
+    def refund_joules(self, tenant: str, joules: float) -> float:
+        """Credit unconsumed joules back to a tenant's energy budget.
+
+        The admission charge prices work that a cancel or failure never
+        delivered; without a refund the tenant pays full price for
+        nothing and a cancelled burst starves its next admissions.  The
+        credit is capped at the burst (a budget can never hold more than
+        a full bucket) and unwinds debt first — a request that borrowed
+        beyond the burst gets its loan forgiven before tokens pile up.
+        Returns the joules actually credited.
+        """
+        joules = float(joules)
+        if joules <= 0.0 or self.tenant_joule_rate is None:
+            return 0.0
+        with self._lock:
+            now = time.monotonic()
+            bucket = self._joule_buckets.get(tenant)
+            if bucket is None:
+                # never charged since the bucket was dropped (or the
+                # budget was enabled after the charge): nothing to unwind
+                return 0.0
+            before = bucket[0]
+            bucket[0] = min(self.tenant_joule_burst, before + joules)
+            bucket[1] = max(bucket[1], now)
+            credited = bucket[0] - before
+            if credited > 0.0:
+                self.energy_refunds += 1
+                self.refunded_joules += credited
+        return credited
+
     # -- admission -----------------------------------------------------------
 
     def _screen(self, req: MiningRequest) -> None:
@@ -610,6 +645,7 @@ class AdmissionQueue:
                     self._take_token(req.tenant, now)
                 if self.tenant_joule_rate is not None and cost > 0.0:
                     self._take_joules(req.tenant, cost, now)
+                    req.joules_charged = cost
                 lane = self._lanes.setdefault(req.priority, OrderedDict())
                 pending = lane.get(req.tenant)
                 if pending is None:

@@ -35,8 +35,10 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.core.cancellation import CancellationToken, CancelReason
+from repro.service import faults
 from repro.service.batcher import BatchKey, MicroBatch, MicroBatcher
 from repro.service.bucketing import BucketPolicy, make_policy
+from repro.service.config import ServiceConfig
 from repro.service.cache import ResultCache, content_key
 from repro.service.dispatch import (
     EXECUTOR_DISTRIBUTED,
@@ -322,6 +324,13 @@ class ClusteringService:
         self._stopped = False
         self._draining = False
         self._dispatcher: Optional[threading.Thread] = None
+        # live-reload state: epoch 0 is the constructor config; every
+        # successful apply_config() bumps it (see service/config.py)
+        self._config_epoch = 0
+        self._config_lock = threading.Lock()
+        # optional WAL shipper (service/replicate.py), attached by the
+        # operator layer; surfaces as metrics_snapshot()["replication"]
+        self._replicator = None
 
     def _join_open(self, key: BatchKey) -> bool:
         """Batcher hint: is an in-flight continuous batch with this key
@@ -708,7 +717,8 @@ class ClusteringService:
             self._wal_consume(req)
             return req
         self.tracer.emit(req.trace_id, "enqueue", t_e,
-                         time.monotonic() - m_e)
+                         time.monotonic() - m_e,
+                         config_epoch=self._config_epoch)
         req.add_done_callback(self._request_done)
         return req
 
@@ -1029,6 +1039,14 @@ class ClusteringService:
         err = req.exception(timeout=0)
         if err is not None:
             self.metrics.record_failure(type(err).__name__)
+            # the admission charge priced work this request never
+            # delivered — credit it back so a cancelled/failed burst
+            # doesn't starve the tenant's next admissions.  Replayable
+            # drops (resubmit=True) refund too: their replay re-charges
+            # at resubmission, so keeping the charge would double-bill.
+            if req.joules_charged > 0.0:
+                self.queue.refund_joules(req.tenant, req.joules_charged)
+                req.joules_charged = 0.0
         if self.wal is None or req.wal_id is None:
             return
         if err is not None and getattr(err, "resubmit", False):
@@ -1269,6 +1287,117 @@ class ClusteringService:
             "pending_after": summary["pending_after"]})
         return summary
 
+    # -- zero-downtime operations: live reload + handover ---------------------
+
+    @property
+    def config_epoch(self) -> int:
+        return self._config_epoch
+
+    def current_config(self) -> ServiceConfig:
+        """The live values of every reloadable knob, at the current epoch."""
+        return ServiceConfig.from_service(self, epoch=self._config_epoch)
+
+    def apply_config(self, changes: Dict[str, Any]) -> ServiceConfig:
+        """Live-reload tuning knobs without a restart.
+
+        Validation-before-apply: the whole candidate config (current
+        values + ``changes``) is checked first — including structural
+        limits like "a pacer cannot be conjured at runtime" — and only
+        then are the live objects mutated, so a rejected reload changes
+        *nothing*.  Returns the new config (its ``epoch`` is the proof
+        of application; workers report it in ``/healthz``).
+        """
+        with self._config_lock:
+            current = self.current_config()
+            candidate = current.replace(dict(changes))
+            candidate.validate()
+            # structural checks the dataclass cannot know: the pacer's
+            # existence is decided at construction (lanes hold the
+            # reference), so a cap can be re-tuned live but not toggled
+            if candidate.power_cap_watts is not None and self.pacer is None:
+                raise ValueError(
+                    "enabling a power cap requires a restart: the service "
+                    "was built without a pacer (--power-cap at startup)")
+            if candidate.power_cap_watts is None and self.pacer is not None:
+                raise ValueError(
+                    "disabling the power cap requires a restart; raise "
+                    "power_cap_watts instead to loosen it")
+            new_policy: Optional[BucketPolicy] = None
+            if (candidate.bucket_policy is not None
+                    and candidate.bucket_policy != current.bucket_policy):
+                new_policy = make_policy(candidate.bucket_policy)
+            # -- apply: nothing below may fail ---------------------------
+            q = self.queue
+            q.tenant_rate = candidate.tenant_rate
+            q.tenant_burst = candidate.tenant_burst
+            q.tenant_joule_rate = candidate.tenant_joule_rate
+            q.tenant_joule_burst = float(candidate.tenant_joule_burst)
+            q.max_backlog = candidate.max_backlog
+            q.max_per_tenant = candidate.max_per_tenant
+            if self.pacer is not None and candidate.power_cap_watts:
+                with self.pacer._lock:
+                    self.pacer.watts = float(candidate.power_cap_watts)
+                    if candidate.power_cap_burst_joules is not None:
+                        self.pacer.burst_joules = float(
+                            candidate.power_cap_burst_joules)
+            if new_policy is not None:
+                # the batcher shares the policy reference; swap both so
+                # future batches bucket under the new edges (in-flight
+                # batches keep the shape they were formed at)
+                self.bucket_policy = new_policy
+                self.batcher.policy = new_policy
+            self.join_window_s = candidate.join_window_s
+            self._config_epoch = candidate.epoch
+        self._telemetry_event("config_reload", {
+            "epoch": candidate.epoch,
+            "changes": sorted(changes)})
+        return candidate
+
+    def attach_replicator(self, shipper: Any) -> None:
+        """Register the WAL shipper whose stats ride
+        ``metrics_snapshot()["replication"]`` (see service/replicate.py)."""
+        self._replicator = shipper
+
+    def handover(self, *, successor_kwargs: Optional[Dict[str, Any]] = None,
+                 drain_timeout: float = 30.0,
+                 replay_rate: Optional[float] = None,
+                 replay_burst: int = 8) -> "ClusteringService":
+        """In-process rolling restart: drain, hand the WAL to a successor.
+
+        The predecessor ``stop(drain=True)``s — admission closes with a
+        *retryable* rejection, everything admitted runs to completion,
+        and the WAL writer lock releases with its fd.  The successor is
+        then built over the same workdir (``successor_kwargs`` may change
+        any constructor knob — this is how restart-only config lands),
+        warms its exec cache via ``warm_start`` during ``start()``, takes
+        the WAL lock, and replays whatever the drain left behind,
+        rate-shaped.  Returns the started, recovered successor; the
+        predecessor is fully stopped.
+
+        The fleet version of this — drain/respawn one *process* at a
+        time with the router re-pinning around each — is
+        ``WorkerManager.rolling_restart()``.
+        """
+        kwargs = dict(successor_kwargs or {})
+        kwargs.setdefault("warm_start", list(self.warm_start))
+        if self._replicator is not None:
+            # the old process's shipper must not race the successor's
+            # appends; the operator layer re-attaches one if it wants
+            self._replicator.stop()
+        self.stop(drain=True, timeout=drain_timeout)
+        # crash window: predecessor drained and unlocked, successor not
+        # yet alive — the WAL on disk is the whole truth
+        faults.at("service.handover.before_successor")
+        successor = ClusteringService(self.workdir, **kwargs)
+        successor.start()
+        summary = successor.recover(replay_rate=replay_rate,
+                                    replay_burst=replay_burst)
+        successor._telemetry_event("handover", {
+            "predecessor_pid": os.getpid(),
+            "replayed": summary["replayed"],
+            "resumed_batches": summary["resumed_batches"]})
+        return successor
+
     def metrics_snapshot(self) -> Dict[str, Any]:
         snap = self.metrics.snapshot()
         # the metrics object counts padding/recompiles; the policy itself
@@ -1317,6 +1446,8 @@ class ClusteringService:
                 "tenant_joule_rate": self.queue.tenant_joule_rate,
                 "tenant_joule_burst": self.queue.tenant_joule_burst,
                 "rejections": self.queue.energy_rejected,
+                "refunds": self.queue.energy_refunds,
+                "refunded_joules": self.queue.refunded_joules,
             },
             "joules_total": totals.get("modeled_joules", 0.0),
             "joules_per_point": (
@@ -1330,6 +1461,10 @@ class ClusteringService:
         snap["energy"] = energy
         snap["exec_cache"] = self.exec_cache.stats()
         snap["wal"] = self.wal.stats() if self.wal is not None else None
+        snap["replication"] = (self._replicator.stats()
+                               if self._replicator is not None else None)
+        snap["config"] = {"epoch": self._config_epoch,
+                          **self.current_config().as_dict()}
         ws = self.metrics.window_stats()
         snap["slo"] = self.slo.evaluate(
             ws["latencies"], ws["failures"], ws["outcomes"])

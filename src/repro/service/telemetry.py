@@ -216,6 +216,29 @@ def render_prometheus(snapshot: Dict[str, Any], prefix: str = "repro") -> str:
             out.add(f"wal_{key}", wal[key],
                     help_text=f"Admission WAL {key}", kind=kind)
 
+    # replication (primary side) / live-reload config ---------------------
+    repl = snapshot.get("replication") or {}
+    for key, kind, help_text in (
+            ("bytes_shipped", "counter", "WAL bytes shipped to the standby"),
+            ("chunks_shipped", "counter", "Replication chunks shipped"),
+            ("retires_shipped", "counter",
+             "Segment-retire notices shipped after compaction"),
+            ("ship_errors", "counter", "Failed shipping attempts"),
+            ("standby_lag_entries", "gauge",
+             "Entries the standby lags the primary (last ack)"),
+            ("standby_lag_seconds", "gauge",
+             "Seconds the standby lags the primary (last ack)"),
+    ):
+        if repl.get(key) is not None:
+            name = (f"replication_{key}_total" if kind == "counter"
+                    else f"replication_{key}")
+            out.add(name, repl[key], help_text=help_text, kind=kind)
+    cfg = snapshot.get("config") or {}
+    if "epoch" in cfg:
+        out.add("config_epoch", cfg["epoch"],
+                help_text="Live-reload config epoch (0 = constructor "
+                          "config; each applied reload bumps it)")
+
     # energy -------------------------------------------------------------
     energy = snapshot.get("energy") or {}
     if "modeled_watts" in energy:
@@ -243,6 +266,14 @@ def render_prometheus(snapshot: Dict[str, Any], prefix: str = "repro") -> str:
     if "rejections" in budget:
         out.add("energy_budget_rejections_total", budget["rejections"],
                 help_text="Admissions bounced by a tenant joule budget",
+                kind="counter")
+    if "refunds" in budget:
+        out.add("energy_budget_refunds_total", budget["refunds"],
+                help_text="Cancel/failure refunds credited to joule budgets",
+                kind="counter")
+        out.add("energy_budget_refunded_joules_total",
+                budget.get("refunded_joules", 0.0),
+                help_text="Joules credited back by cancel/failure refunds",
                 kind="counter")
     if "joules_total" in energy:
         out.add("energy_joules_total", energy["joules_total"],

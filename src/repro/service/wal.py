@@ -56,6 +56,8 @@ from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.service import faults
+
 try:                               # POSIX only; the lock degrades to a
     import fcntl                   # no-op where record locks don't exist
 except ImportError:                # pragma: no cover - non-POSIX hosts
@@ -426,7 +428,13 @@ class RequestLog:
                                             set()).add(admit_id)
                 self.appended += 1
             end = (self._seg_seq, self._written)
+        # crash window 1: the record is written but not yet durable — a
+        # kill here must lose the record without corrupting the segment
+        faults.at("wal.append.before_fsync")
         self._sync_to(end)
+        # crash window 2: durable but the caller was never told — replay
+        # must surface the entry (at-least-once, deduped by content hash)
+        faults.at("wal.append.after_fsync")
         return end[0]
 
     def _sync_to(self, end: Tuple[int, int]) -> None:
@@ -503,6 +511,10 @@ class RequestLog:
                      if int(i) not in self._consumed]
         if not fresh:
             return
+        # crash window: result delivered but the consume marker is not
+        # durable — replay re-runs the entry and the content-hash cache
+        # absorbs the duplicate
+        faults.at("wal.mark_consumed.before_append")
         self._append(_CONSUME, {"entry_ids": fresh, "job_id": job_id})
         with self._lock:
             self._consumed.update(fresh)
@@ -648,6 +660,10 @@ class RequestLog:
                 admits = self._seg_admits[seq]
                 if admits - self._consumed:
                     break                          # a live entry pins it
+                # crash window: segment chosen for removal but still on
+                # disk — a kill here leaves a fully-consumed segment that
+                # the next open simply re-indexes and re-compacts
+                faults.at("wal.compact.before_unlink")
                 try:
                     os.unlink(self._seg_path(seq))
                 except OSError:
@@ -685,6 +701,9 @@ class RequestLog:
                 "appended": self.appended,
                 "fsyncs": self.fsyncs,
                 "compacted_segments": self.compacted_segments,
+                # replication watermark: highest entry id ever issued —
+                # the shipper reports standby lag against this
+                "last_entry_id": self._next_id - 1,
                 "locked": self._lock_key is not None,
             }
 

@@ -1,0 +1,54 @@
+"""Test-side handle on the deterministic fault-injection harness.
+
+Thin re-export of :mod:`repro.service.faults` plus the helpers tests
+actually reach for: an ``armed()`` context manager that guarantees the
+plan is disarmed on exit (so one test's faults can never leak into the
+next), and ``child_env()`` which builds the environment for arming a
+*subprocess* under test via ``REPRO_FAULT``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Dict, Iterator, Optional
+
+from repro.service import faults
+from repro.service.faults import (  # noqa: F401  (re-exported for tests)
+    POINTS,
+    FaultInjected,
+    FaultPlan,
+    activate,
+    at,
+    coverage,
+    hits,
+    parse_spec,
+    read_ledger,
+    reset,
+)
+
+
+@contextlib.contextmanager
+def armed(spec: str, *, seed: Optional[int] = None,
+          ledger: Optional[str] = None) -> Iterator[FaultPlan]:
+    """Arm ``spec`` for the duration of a with-block, then disarm."""
+    plan = activate(spec, seed=seed, ledger=ledger)
+    try:
+        yield plan
+    finally:
+        reset()
+
+
+def child_env(spec: str, *, seed: Optional[int] = None,
+              ledger: Optional[str] = None,
+              base: Optional[Dict[str, str]] = None) -> Dict[str, str]:
+    """Environment dict arming a subprocess with ``spec``."""
+    env = dict(base if base is not None else os.environ)
+    env["REPRO_FAULT"] = spec
+    if seed is not None:
+        env["REPRO_FAULT_SEED"] = str(seed)
+    if ledger is not None:
+        env["REPRO_FAULT_LEDGER"] = ledger
+    else:
+        env.pop("REPRO_FAULT_LEDGER", None)
+    return env

@@ -193,6 +193,63 @@ def test_energy_rejection_precedes_wal_append(tmp_path):
         h.result(120)
 
 
+# -- joule refunds on cancel/failure -------------------------------------------
+
+
+def test_joule_refund_restores_budget_caps_at_burst_and_unwinds_debt():
+    q = AdmissionQueue(tenant_joule_rate=1e-9, tenant_joule_burst=10.0,
+                       joule_cost=lambda r: 6.0)
+    t0 = 100.0
+    q._take_joules("t0", 6.0, t0)                  # fresh budget: 10 -> 4
+    with pytest.raises(EnergyBudgetExceeded):
+        q._take_joules("t0", 6.0, t0)              # 4 < 6, refill is ~never
+    assert q.refund_joules("t0", 6.0) == pytest.approx(6.0)
+    q._take_joules("t0", 6.0, t0)                  # refund reopened the door
+    assert q.energy_refunds == 1
+    assert q.refunded_joules == pytest.approx(6.0)
+    # the credit caps at the burst: refunding 100 J on a bucket at 4 fills
+    # to the brim, no further
+    assert q.refund_joules("t0", 100.0) == pytest.approx(6.0)
+    assert q._joule_buckets["t0"][0] == pytest.approx(10.0)
+    # debt unwinds first: a beyond-burst loan is forgiven before tokens pile
+    q._take_joules("t0", 25.0, t0)                 # debt gate: 10 -> -15
+    assert q._joule_buckets["t0"][0] == pytest.approx(-15.0)
+    assert q.refund_joules("t0", 25.0) == pytest.approx(25.0)
+    assert q._joule_buckets["t0"][0] == pytest.approx(10.0)
+    # no-ops: a tenant never charged, and a disabled budget
+    assert q.refund_joules("ghost", 5.0) == 0.0
+    assert AdmissionQueue().refund_joules("t0", 5.0) == 0.0
+
+
+def test_cancel_refunds_charge_and_reopens_admission(tmp_path):
+    from repro.service.telemetry import exposition_errors, render_prometheus
+    svc = ClusteringService(str(tmp_path / "svc"), max_batch=8,
+                            max_wait_s=5.0, cache_entries=0,
+                            tenant_joule_rate=1e-9, tenant_joule_burst=6.0)
+    svc.queue.joule_cost = lambda r: 5.0
+    with svc:
+        r1 = svc.submit("t0", "kmeans", blob(1),
+                        params=dict(KM_PARAMS, seed=1))
+        assert r1.joules_charged == pytest.approx(5.0)
+        # the budget is dry: the same tenant's next request bounces
+        with pytest.raises(EnergyBudgetExceeded):
+            svc.submit("t0", "kmeans", blob(2),
+                       params=dict(KM_PARAMS, seed=2))
+        # cancel fails the handle synchronously -> the charge comes back
+        assert r1.cancel()
+        snap = svc.metrics_snapshot()
+        assert snap["energy"]["budget"]["refunds"] == 1
+        assert snap["energy"]["budget"]["refunded_joules"] == pytest.approx(
+            5.0)
+        r2 = svc.submit("t0", "kmeans", blob(3),
+                        params=dict(KM_PARAMS, seed=3))
+        assert r2.joules_charged == pytest.approx(5.0)
+        text = render_prometheus(svc.metrics_snapshot())
+        assert "energy_budget_refunds_total 1" in text
+        assert exposition_errors(text) == []
+        r2.cancel()
+
+
 # -- power-cap pacer -----------------------------------------------------------
 
 

@@ -414,15 +414,22 @@ def test_cache_disk_byte_bound_evicts_lru(tmp_path):
 
 def test_fleet_two_workers_submit_stream_and_failover(tmp_path):
     """One spawn pays for the whole integration surface: placement with
-    worker attribution, sticky streaming, then SIGKILL + WAL takeover
+    worker attribution, sticky streaming, then a deterministic in-worker
+    SIGKILL (fault harness, not a parent-side kill window) + WAL takeover
     with the durable result served by the adopter."""
+    ledger = str(tmp_path / "faults.ledger")
     manager = WorkerManager(
         str(tmp_path / "fleet"), 2,
         worker_config={"max_batch": 4, "max_wait_s": 0.005},
         # worker-0 admits but never batches: its requests sit in the
         # WAL window so the takeover has something real to replay
         overrides={"worker-0": {"max_batch": 64, "max_wait_s": 3600.0}},
-        heartbeat_interval=0.25)
+        heartbeat_interval=0.25,
+        # worker-0 SIGKILLs itself inside its SECOND WAL append, after
+        # the fsync: the entry is durable but the ACK never leaves —
+        # exactly the crash window fleet failover exists for
+        fault_specs={"worker-0": "wal.append.after_fsync=kill@2"},
+        fault_ledger=ledger)
     manager.start()
     router = FleetRouter(manager)
     try:
@@ -454,14 +461,95 @@ def test_fleet_two_workers_submit_stream_and_failover(tmp_path):
         ack = h.admitted(60)
         assert ack["accepted"] and ack["worker"] == "worker-0"
 
-        manager.fail_worker("worker-0")
+        # the SECOND durable admit trips the armed fault: worker-0 dies
+        # by its own hand mid-append (durable, unacked); the router's
+        # at-least-once retry re-admits it on worker-1 by content hash
+        h2 = router.submit(victim_tenant, "kmeans", pts(14),
+                           params={"k": 3, "seed": 14},
+                           executor="jax-ref", durable=True)
+        ack2 = h2.admitted(120)
+        assert ack2["accepted"] and ack2["worker"] == "worker-1"
+
+        deadline = time.monotonic() + 30.0
+        while not manager.takeovers and time.monotonic() < deadline:
+            time.sleep(0.05)
         assert manager.takeovers and (
             manager.takeovers[0]["victim"] == "worker-0")
         assert manager.takeovers[0]["replayed"] >= 1
+        # the ledger proves the kill fired where the spec said it would
+        from tests._faults import read_ledger
+        assert any(e["point"] == "wal.append.after_fsync"
+                   and e["action"] == "kill" and e["hit"] == 2
+                   for e in read_ledger(ledger))
         # the adopter serves the admitted work; the tenant re-places
         assert h.result(120)["labels"].shape == (48,)
+        assert h2.result(120)["labels"].shape == (48,)
         assert router.place(victim_tenant) == "worker-1"
         assert "worker-0" not in router.ring
+    finally:
+        router.close()
+        manager.stop()
+
+
+def test_fleet_rolling_restart_and_live_reload(tmp_path):
+    """Rolling restart: every worker is replaced (new pids) one at a time
+    while durable requests admitted before and during the roll all
+    resolve — zero admitted requests lost, no client-visible downtime
+    beyond retryable backpressure.  Live reload: one ``router.reload()``
+    converges every worker on the same new config epoch, visible in the
+    next heartbeat."""
+    manager = WorkerManager(
+        str(tmp_path / "fleet"), 2,
+        worker_config={"max_batch": 4, "max_wait_s": 0.005},
+        heartbeat_interval=0.25)
+    manager.start()
+    router = FleetRouter(manager)
+    try:
+        # live reload fans out and converges on one epoch
+        out = router.reload({"tenant_rate": 500.0, "max_backlog": 512})
+        assert out["converged"], out
+        assert set(out["epochs"]) == {"worker-0", "worker-1"}
+        assert set(out["epochs"].values()) == {1}
+        # a bad knob is rejected by every worker, applied by none
+        bad = router.reload({"tenant_rate": -1.0})
+        assert not bad["converged"] and len(bad["errors"]) == 2
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            epochs = {w.health.get("config_epoch")
+                      for w in manager.live_workers()}
+            if epochs == {1}:
+                break
+            time.sleep(0.1)
+        assert epochs == {1}, "heartbeats never converged on the epoch"
+
+        before = [router.submit(f"t-{i}", "kmeans", pts(40 + i),
+                                params={"k": 3, "seed": 40 + i},
+                                executor="jax-ref", durable=True)
+                  for i in range(4)]
+        for h in before:
+            assert h.admitted(60)["accepted"]
+        old_pids = {n: manager.worker(n).pid for n in manager.workers}
+
+        summary = manager.rolling_restart(drain_timeout=60.0)
+
+        assert [r["worker"] for r in summary] == ["worker-0", "worker-1"]
+        for rec in summary:
+            assert rec["new_pid"] != old_pids[rec["worker"]]
+        assert all(w.alive for w in manager.live_workers())
+        assert len(manager.live_workers()) == 2
+        assert "worker-0" in router.ring and "worker-1" in router.ring
+        # nothing admitted before the roll was lost
+        for h in before:
+            assert h.result(120)["labels"].shape == (48,)
+        # and the restarted fleet still takes new work
+        after = router.submit("t-after", "kmeans", pts(50),
+                              params={"k": 3, "seed": 50},
+                              executor="jax-ref", durable=True)
+        assert after.result(120)["labels"].shape == (48,)
+        # config survives within the epoch stream: successors start at
+        # epoch 0 of their own process (restart-only knobs need the roll)
+        snap = manager.fleet_snapshot()
+        assert len(snap["restarts"]) == 2
     finally:
         router.close()
         manager.stop()

@@ -315,7 +315,7 @@ def test_completed_and_cancelled_requests_do_not_replay(tmp_path):
 
 
 _KILL_SCRIPT = r"""
-import sys, time
+import sys
 sys.path.insert(0, {src!r})
 import numpy as np
 from repro.service import ClusteringService, MiningClient
@@ -330,33 +330,36 @@ for i in range(3):
                         .astype(np.float32) for c in centers])
     client.submit(f"t{{i}}", "kmeans", x, params={{"k": 3, "seed": i}},
                   executor="jax-ref")
-print("ADMITTED", flush=True)
-time.sleep(600)
+print("SURVIVED", flush=True)     # unreachable: the 3rd append kills us
 """
 
 
 @pytest.mark.slow
 def test_sigkill_between_admission_and_batching_replays(tmp_path):
-    """A real kill -9 after admission, before any batch forms: the WAL is
-    the only survivor, and recover() replays every request."""
+    """A real SIGKILL after admission, before any batch forms: the WAL is
+    the only survivor, and recover() replays every request.
+
+    The kill is injected deterministically through the fault harness
+    (``wal.append.after_fsync=kill@3``): the child dies inside its third
+    ``append_admit``, *after* the fsync — all three admits are durable,
+    none was batched, and the ledger proves exactly where it died.  This
+    replaces the old racy parent-side ``kill -9`` window."""
+    from tests._faults import child_env, read_ledger
+
     workdir = str(tmp_path / "svc")
+    ledger = str(tmp_path / "faults.ledger")
     script = _KILL_SCRIPT.format(src=SRC, workdir=workdir)
-    proc = subprocess.Popen([sys.executable, "-c", script],
-                            stdout=subprocess.PIPE, text=True)
-    try:
-        deadline = time.time() + 120
-        admitted = False
-        while time.time() < deadline:
-            line = proc.stdout.readline()
-            if line.startswith("ADMITTED"):
-                admitted = True
-                break
-            if not line:
-                break
-        proc.send_signal(signal.SIGKILL)
-    finally:
-        proc.wait(30)
-    assert admitted, "child never admitted its requests"
+    proc = subprocess.Popen(
+        [sys.executable, "-c", script],
+        env=child_env("wal.append.after_fsync=kill@3", ledger=ledger),
+        stdout=subprocess.PIPE, text=True)
+    out, _ = proc.communicate(timeout=120)
+    assert proc.returncode == -signal.SIGKILL
+    assert "SURVIVED" not in out
+    assert {"point": "wal.append.after_fsync", "action": "kill",
+            "hit": 3} in [
+        {k: e[k] for k in ("point", "action", "hit")}
+        for e in read_ledger(ledger)]
 
     svc = ClusteringService(workdir, max_batch=4, max_wait_s=0.005)
     client = MiningClient(service=svc)
